@@ -1,0 +1,89 @@
+"""Benchmark substrate: deterministic simulated-time IOPS + wall-clock µs.
+
+Concurrency model (documented in EXPERIMENTS.md): C clients × P processes
+run op streams.  Ops execute round-robin across streams (sequential Python,
+deterministic); each op's modeled latency accumulates on its stream, and
+every RPC/disk cost accrues to the serving node's busy ledger.  Simulated
+makespan = max(longest stream, busiest node) — a standard bottleneck bound
+that captures exactly the contention effects the paper measures (one hot
+MDS / meta partition serializes; spread load doesn't).
+
+    IOPS_sim = total_ops / makespan
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Tuple
+
+
+@dataclass
+class BenchResult:
+    name: str
+    system: str
+    clients: int
+    procs: int
+    ops: int
+    sim_iops: float
+    wall_us_per_op: float
+    latency_us_per_op: float
+    bottleneck: str          # "stream" (latency-bound) | node id (server-bound)
+
+    def row(self) -> str:
+        return (f"{self.name},{self.system},{self.clients},{self.procs},"
+                f"{self.ops},{self.sim_iops:.0f},{self.wall_us_per_op:.1f},"
+                f"{self.latency_us_per_op:.1f},{self.bottleneck}")
+
+
+HEADER = ("test,system,clients,procs,ops,sim_iops,wall_us_per_op,"
+          "lat_us_per_op,bottleneck")
+
+
+# FUSE/VFS per-op client-side cost: 64 procs share ONE fuse daemon + NIC on
+# their client machine, so this accrues to the client node's busy ledger too.
+FUSE_US = 15.0
+
+
+def run_streams(
+    name: str,
+    system: str,
+    net,
+    streams: List[Tuple[str, List[Callable[[], None]]]],
+    clients: int,
+    procs: int,
+    weight: int = 1,          # logical ops per thunk (e.g. stats per dir_stat)
+) -> BenchResult:
+    """streams: one (client_id, [thunks]) per (client, proc) stream."""
+    net.reset_accounting()
+    stream_us = [0.0] * len(streams)
+    total_ops = sum(len(s) for _, s in streams)
+    t0 = time.perf_counter()
+    # round-robin across streams (deterministic interleaving)
+    idx = [0] * len(streams)
+    remaining = total_ops
+    while remaining:
+        for si, (client_id, s) in enumerate(streams):
+            if idx[si] >= len(s):
+                continue
+            op = net.begin_op()
+            s[idx[si]]()
+            net.end_op()
+            stream_us[si] += op.us + FUSE_US * weight
+            net.charge_busy(client_id, FUSE_US * weight)
+            idx[si] += 1
+            remaining -= 1
+    wall = (time.perf_counter() - t0) * 1e6
+    total_ops *= weight
+    longest_stream = max(stream_us) if stream_us else 0.0
+    busiest = max(net.busy_us.items(), key=lambda kv: kv[1],
+                  default=("-", 0.0))
+    makespan = max(longest_stream, busiest[1], 1e-9)
+    return BenchResult(
+        name=name, system=system, clients=clients, procs=procs,
+        ops=total_ops,
+        sim_iops=total_ops / makespan * 1e6,
+        wall_us_per_op=wall / max(total_ops, 1),
+        latency_us_per_op=sum(stream_us) / max(total_ops, 1),
+        bottleneck=("stream" if longest_stream >= busiest[1] else busiest[0]),
+    )

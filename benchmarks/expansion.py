@@ -1,0 +1,49 @@
+"""Capacity-expansion benchmark — the paper's §2.3.1 no-rebalancing claim.
+
+Fill both systems, add storage nodes, and measure (a) bytes migrated and
+(b) the simulated time the expansion costs the cluster.  CFS:
+utilization-based placement moves NOTHING; Ceph-like: CRUSH remaps a
+~1/n fraction of every object."""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.baseline.cephlike import CephLikeCluster, CephLikeMount
+from repro.core import CfsCluster
+
+FILE = 256 * 1024
+N_FILES = 40
+
+
+def run(out_rows: List[str]) -> None:
+    # ---- CFS ---------------------------------------------------------------
+    cfs = CfsCluster(n_meta=4, n_data=6, extent_max_size=1024 * 1024)
+    cfs.create_volume("v", n_meta_partitions=3, n_data_partitions=8)
+    mnt = cfs.mount("v")
+    for i in range(N_FILES):
+        mnt.write_file(f"/f{i}", bytes(FILE))
+    cfs.tick(2)
+    used_before = {nid: dn.disk.used for nid, dn in cfs.data_nodes.items()}
+    cfs.net.reset_accounting()
+    cfs.add_data_node()
+    cfs.add_data_node()
+    cfs.tick(2)
+    moved_cfs = sum(abs(cfs.data_nodes[nid].disk.used - u)
+                    for nid, u in used_before.items())
+    busy_cfs = sum(cfs.net.busy_us.values())
+
+    # ---- Ceph-like -----------------------------------------------------------
+    ceph = CephLikeCluster(n_mds=4, n_osd=6)
+    cmnt = CephLikeMount(ceph, "c0")
+    for i in range(N_FILES):
+        cmnt.write_file(f"/f{i}", bytes(FILE))
+    ceph.net.reset_accounting()
+    _, moved1 = ceph.add_osd()
+    _, moved2 = ceph.add_osd()
+    busy_ceph = sum(ceph.net.busy_us.values())
+
+    out_rows.append(f"Expansion,cfs,-,-,{N_FILES},{moved_cfs},"
+                    f"{busy_cfs:.0f},0,none")
+    out_rows.append(f"Expansion,ceph,-,-,{N_FILES},{moved1 + moved2},"
+                    f"{busy_ceph:.0f},0,rebalance")

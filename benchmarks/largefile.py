@@ -1,0 +1,136 @@
+"""Large-file fio-style benchmark — paper Figures 8-9.
+
+Sequential write/read and random read/write; each process operates its own
+file (scaled: 2 MB files, 128 KB sequential IOs, 4 KB random IOs — the
+SHAPE of the workload matches fio direct-IO, sizes are scaled to simulate
+in reasonable wall time)."""
+
+from __future__ import annotations
+
+import random
+from typing import List
+
+from repro.core import CfsCluster
+from repro.baseline.cephlike import CephLikeCluster, CephLikeMount
+
+from .common import BenchResult, run_streams
+from .mdtest import make_cfs, make_ceph, _mounts, _cid
+
+FILE_SIZE = 2 * 1024 * 1024
+SEQ_IO = 128 * 1024
+RAND_IO = 4096
+N_RAND = 16
+
+
+def _prepare(system, mounts, clients, procs):
+    files = {}
+    for ci in range(clients):
+        for pi in range(procs):
+            path = f"/lf_{ci}_{pi}.bin"
+            files[(ci, pi)] = path
+    return files
+
+
+def bench_large(system: str, cluster, clients: int, procs: int
+                ) -> List[BenchResult]:
+    net = cluster.net
+    mounts = _mounts(system, cluster, clients)
+    files = _prepare(system, mounts, clients, procs)
+    results = []
+    rng = random.Random(7)
+
+    # --- sequential write: stream the whole file in 128K IOs ----------------
+    def sw(mnt, ci, pi):
+        path = files[(ci, pi)]
+        data = bytes(SEQ_IO)
+
+        def one_file():
+            if system == "cfs":
+                f = mnt.open(path, "w")
+                for _ in range(FILE_SIZE // SEQ_IO):
+                    f.write(data)
+                f.close()
+            else:
+                mnt.write_file(path, bytes(FILE_SIZE))
+        return [one_file]
+    ios = FILE_SIZE // SEQ_IO
+    results.append(run_streams(
+        "SeqWrite", system, net,
+        [(_cid(m), sw(m, ci, pi)) for ci, m in enumerate(mounts)
+         for pi in range(procs)], clients, procs, weight=ios))
+
+    # --- sequential read ------------------------------------------------------
+    def sr(mnt, ci, pi):
+        path = files[(ci, pi)]
+
+        def one_file():
+            if system == "cfs":
+                f = mnt.open(path, "r")
+                for _ in range(FILE_SIZE // SEQ_IO):
+                    f.read(SEQ_IO)
+            else:
+                mnt.read_file(path)
+        return [one_file]
+    results.append(run_streams(
+        "SeqRead", system, net,
+        [(_cid(m), sr(m, ci, pi)) for ci, m in enumerate(mounts)
+         for pi in range(procs)], clients, procs, weight=ios))
+
+    # --- random read: 4K at random offsets (fd kept open, like fio) ---------
+    def rr(mnt, ci, pi):
+        path = files[(ci, pi)]
+        offs = [rng.randrange(0, FILE_SIZE - RAND_IO) for _ in range(N_RAND)]
+        if system == "cfs":
+            state = {}
+
+            def make(o):
+                def op():
+                    if "f" not in state:
+                        state["f"] = mnt.open(path, "r")
+                    state["f"].seek(o)
+                    state["f"].read(RAND_IO)
+                return op
+            return [make(o) for o in offs]
+        return [lambda o=o, mnt=mnt: mnt.read_range(path, o, RAND_IO)
+                for o in offs]
+    results.append(run_streams(
+        "RandRead", system, net,
+        [(_cid(m), rr(m, ci, pi)) for ci, m in enumerate(mounts)
+         for pi in range(procs)], clients, procs))
+
+    # --- random write: 4K in-place overwrites (fd kept open) -----------------
+    def rw(mnt, ci, pi):
+        path = files[(ci, pi)]
+        offs = [rng.randrange(0, FILE_SIZE - RAND_IO) for _ in range(N_RAND)]
+        data = bytes(RAND_IO)
+        if system == "cfs":
+            state = {}
+
+            def make(o):
+                def op():
+                    if "f" not in state:
+                        state["f"] = mnt.open(path, "r+")
+                    state["f"].seek(o)
+                    state["f"].write(data)
+                return op
+            return [make(o) for o in offs]
+        return [lambda o=o, mnt=mnt: mnt.overwrite(path, o, data)
+                for o in offs]
+    results.append(run_streams(
+        "RandWrite", system, net,
+        [(_cid(m), rw(m, ci, pi)) for ci, m in enumerate(mounts)
+         for pi in range(procs)], clients, procs))
+    return results
+
+
+def run(out_rows: List[str]) -> None:
+    # Fig. 8: single client, procs sweep; Fig. 9: multi-client
+    for system, factory in (("cfs", make_cfs), ("ceph", make_ceph)):
+        for procs in (1, 8, 32):
+            cluster = factory()
+            for r in bench_large(system, cluster, 1, procs):
+                out_rows.append(r.row())
+        for clients in (4, 8):
+            cluster = factory()
+            for r in bench_large(system, cluster, clients, 16):
+                out_rows.append(r.row())

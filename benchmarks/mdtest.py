@@ -1,0 +1,163 @@
+"""mdtest-style metadata benchmark — paper Table 3 / Figures 6-7.
+
+Seven operations (Table 2), run on CFS and the Ceph-like baseline across a
+single-client process sweep (Fig. 6) and a multi-client sweep at 64
+procs/client (Fig. 7 / Table 3)."""
+
+from __future__ import annotations
+
+from typing import Callable, List
+
+from repro.core import CfsCluster
+from repro.baseline.cephlike import CephLikeCluster, CephLikeMount
+
+from .common import BenchResult, run_streams
+
+ITEMS = 12               # items per proc per test (sim-time, not wall time)
+TREE_DEPTH = 4           # TreeCreation/Removal: branching-2 tree of dirs
+TREE_BRANCH = 2
+
+
+def make_cfs(n_nodes: int = 10):
+    c = CfsCluster(n_meta=n_nodes, n_data=n_nodes,
+                   meta_mem_capacity=512 * 1024 * 1024,
+                   extent_max_size=8 * 1024 * 1024, seed=42)
+    c.create_volume("bench", n_meta_partitions=n_nodes,
+                    n_data_partitions=3 * n_nodes)
+    return c
+
+
+def make_ceph(n_nodes: int = 10):
+    return CephLikeCluster(n_mds=n_nodes, n_osd=n_nodes, seed=42,
+                           mds_cache_entries=3000)
+
+
+def _mounts(system, cluster, clients: int):
+    if system == "cfs":
+        return [cluster.mount("bench", client_id=f"c{i}")
+                for i in range(clients)]
+    return [CephLikeMount(cluster, f"c{i}") for i in range(clients)]
+
+
+def _cid(mnt) -> str:
+    return getattr(mnt, "client_id", None) or mnt.client.client_id
+
+
+def _streams_for(mounts, procs: int, op_factory) -> List:
+    streams = []
+    for ci, mnt in enumerate(mounts):
+        for pi in range(procs):
+            streams.append((_cid(mnt), op_factory(mnt, ci, pi)))
+    return streams
+
+
+def bench_mdtest(system: str, cluster, clients: int, procs: int
+                 ) -> List[BenchResult]:
+    net = cluster.net
+    mounts = _mounts(system, cluster, clients)
+    results = []
+    base = f"/md_{clients}x{procs}"
+    mounts[0].mkdir(base)
+
+    # --- DirCreation: per-proc unique dirs under a SHARED parent ----------
+    def dc(mnt, ci, pi):
+        return [lambda i=i, ci=ci, pi=pi, mnt=mnt:
+                mnt.mkdir(f"{base}/d{ci}_{pi}_{i}") for i in range(ITEMS)]
+    results.append(run_streams("DirCreation", system, net,
+                               _streams_for(mounts, procs, dc),
+                               clients, procs))
+
+    # --- DirStat: list all files in the current directory ------------------
+    stat_dir = f"{base}/statdir"
+    mounts[0].mkdir(stat_dir)
+    for i in range(64):
+        mounts[0].write_file(f"{stat_dir}/f{i}", b"")
+
+    def ds(mnt, ci, pi):
+        return [lambda mnt=mnt: mnt.dir_stat(stat_dir) for _ in range(4)]
+    # each dir_stat touches 64 files: weight reports per-FILE-stat IOPS
+    results.append(run_streams("DirStat", system, net,
+                               _streams_for(mounts, procs, ds),
+                               clients, procs, weight=64))
+
+    # --- DirRemoval ----------------------------------------------------------
+    def dr(mnt, ci, pi):
+        return [lambda i=i, ci=ci, pi=pi, mnt=mnt:
+                mnt.rmdir(f"{base}/d{ci}_{pi}_{i}") for i in range(ITEMS)]
+    results.append(run_streams("DirRemoval", system, net,
+                               _streams_for(mounts, procs, dr),
+                               clients, procs))
+
+    # --- FileCreation ----------------------------------------------------------
+    def fc(mnt, ci, pi):
+        return [lambda i=i, ci=ci, pi=pi, mnt=mnt:
+                mnt.write_file(f"{base}/f{ci}_{pi}_{i}", b"")
+                for i in range(ITEMS)]
+    results.append(run_streams("FileCreation", system, net,
+                               _streams_for(mounts, procs, fc),
+                               clients, procs))
+
+    # --- FileRemoval -------------------------------------------------------------
+    def fr(mnt, ci, pi):
+        return [lambda i=i, ci=ci, pi=pi, mnt=mnt:
+                mnt.unlink(f"{base}/f{ci}_{pi}_{i}") for i in range(ITEMS)]
+    results.append(run_streams("FileRemoval", system, net,
+                               _streams_for(mounts, procs, fr),
+                               clients, procs))
+
+    # --- TreeCreation: nested dependent mkdirs (non-leaf tree nodes) ---------
+    def tree_paths(root: str) -> List[str]:
+        paths = []
+        frontier = [root]
+        for _ in range(TREE_DEPTH):
+            nxt = []
+            for p in frontier:
+                for b in range(TREE_BRANCH):
+                    child = f"{p}/t{b}"
+                    paths.append(child)
+                    nxt.append(child)
+            frontier = nxt
+        return paths
+
+    def tc(mnt, ci, pi):
+        root = f"{base}/tree{ci}_{pi}"
+        ops = [lambda mnt=mnt, root=root: mnt.mkdir(root)]
+        ops += [lambda p=p, mnt=mnt: mnt.mkdir(p) for p in tree_paths(root)]
+        return ops
+    # tree ops are DEPENDENT (each mkdir needs its parent): the whole tree
+    # is one serial chain per stream — IOPS is tiny, as in the paper
+    r = run_streams("TreeCreation", system, net,
+                    _streams_for(mounts, min(procs, 1), tc),
+                    clients, min(procs, 1))
+    # mdtest reports tree ops per second over the serial chain
+    r.sim_iops = r.sim_iops / max(len(tree_paths("x")) + 1, 1) * 1.0
+    results.append(r)
+
+    # --- TreeRemoval ----------------------------------------------------------------
+    def tr(mnt, ci, pi):
+        root = f"{base}/tree{ci}_{pi}"
+        paths = [root] + tree_paths(root)
+        paths.sort(key=lambda p: -p.count("/"))     # bottom-up
+        return [lambda p=p, mnt=mnt: mnt.rmdir(p) for p in paths]
+    r = run_streams("TreeRemoval", system, net,
+                    _streams_for(mounts, min(procs, 1), tr),
+                    clients, min(procs, 1))
+    r.sim_iops = r.sim_iops / max(len(tree_paths("x")) + 1, 1) * 1.0
+    results.append(r)
+
+    return results
+
+
+def run(out_rows: List[str]) -> None:
+    # Fig. 6: single client, procs sweep; Fig. 7/Table 3: clients x 64 procs
+    single = [1, 4, 16, 64]
+    multi = [(2, 64), (4, 64), (8, 64)]
+    for system, factory in (("cfs", make_cfs), ("ceph", make_ceph)):
+        for procs in single:
+            cluster = factory()
+            for r in bench_mdtest(system, cluster, 1, procs):
+                out_rows.append(r.row())
+        for clients, procs in multi:
+            cluster = factory()
+            for r in bench_mdtest(system, cluster, clients, procs):
+                out_rows.append(r.row())

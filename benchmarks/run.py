@@ -1,0 +1,76 @@
+"""Benchmark driver — one suite per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--suite mdtest|largefile|smallfile|expansion|roofline]
+
+Prints CSV rows (test,system,clients,procs,ops,sim_iops,wall_us_per_op,...)
+and writes results/bench/<suite>.csv.  The roofline suite summarizes the
+dry-run artifacts in results/dryrun/ (§Roofline inputs)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "bench"
+
+
+def run_suite(name: str, rows: list) -> None:
+    from . import expansion, largefile, mdtest, smallfile
+    mod = {"mdtest": mdtest, "largefile": largefile,
+           "smallfile": smallfile, "expansion": expansion}[name]
+    mod.run(rows)
+
+
+def roofline_summary(rows: list) -> None:
+    dry = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+    rows.append("# arch,shape,mesh,ok,compute_s,memory_s,collective_s,"
+                "dominant,model_hlo_ratio")
+    from repro.configs import get_arch, get_shape
+    from repro.launch.roofline import model_flops_per_device
+    for p in sorted(dry.glob("*.json")):
+        r = json.loads(p.read_text())
+        if not r.get("ok"):
+            rows.append(f"{r['arch']},{r['shape']},{r['mesh']},FAIL,,,,,")
+            continue
+        rf = r.get("roofline", {})
+        tot = r.get("totals", {})
+        ratio = ""
+        if tot.get("dot_flops"):
+            mf = model_flops_per_device(get_arch(r["arch"]),
+                                        get_shape(r["shape"]))
+            ratio = f"{mf / tot['dot_flops']:.3f}"
+        rows.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},OK,"
+            f"{rf.get('compute_s', 0):.4f},{rf.get('memory_s', 0):.4f},"
+            f"{rf.get('collective_s', 0):.4f},{rf.get('dominant', '?')},"
+            f"{ratio}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="all",
+                    choices=["all", "mdtest", "largefile", "smallfile",
+                             "expansion", "roofline"])
+    args = ap.parse_args()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+
+    suites = (["mdtest", "largefile", "smallfile", "expansion", "roofline"]
+              if args.suite == "all" else [args.suite])
+    from .common import HEADER
+    for suite in suites:
+        rows: list = []
+        print(f"=== suite: {suite} ===")
+        if suite == "roofline":
+            roofline_summary(rows)
+        else:
+            rows.insert(0, HEADER)
+            run_suite(suite, rows)
+        for row in rows:
+            print(row)
+        (RESULTS / f"{suite}.csv").write_text("\n".join(rows) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Small-file benchmark — paper Figure 10.
+
+1 KB – 128 KB files (the product-image use case: write once, never modify),
+8 clients x 64 procs."""
+
+from __future__ import annotations
+
+from typing import List
+
+from .common import BenchResult, run_streams
+from .mdtest import make_cfs, make_ceph, _mounts, _cid
+
+SIZES = [1024, 8 * 1024, 32 * 1024, 128 * 1024]
+N_FILES = 6
+
+
+def bench_small(system: str, cluster, clients: int, procs: int,
+                size: int) -> List[BenchResult]:
+    net = cluster.net
+    mounts = _mounts(system, cluster, clients)
+    data = bytes(size)
+
+    def wr(mnt, ci, pi):
+        return [lambda i=i, mnt=mnt, ci=ci, pi=pi:
+                mnt.write_file(f"/sf{size}_{ci}_{pi}_{i}", data)
+                for i in range(N_FILES)]
+
+    def rd(mnt, ci, pi):
+        return [lambda i=i, mnt=mnt, ci=ci, pi=pi:
+                mnt.read_file(f"/sf{size}_{ci}_{pi}_{i}")
+                for i in range(N_FILES)]
+
+    r_w = run_streams(f"SmallWrite_{size // 1024}K", system, net,
+                      [(_cid(m), wr(m, ci, pi)) for ci, m in enumerate(mounts)
+                       for pi in range(procs)], clients, procs)
+    r_r = run_streams(f"SmallRead_{size // 1024}K", system, net,
+                      [(_cid(m), rd(m, ci, pi)) for ci, m in enumerate(mounts)
+                       for pi in range(procs)], clients, procs)
+    return [r_w, r_r]
+
+
+def run(out_rows: List[str]) -> None:
+    clients, procs = 8, 16       # scaled from the paper's 8 x 64
+    for system, factory in (("cfs", make_cfs), ("ceph", make_ceph)):
+        for size in SIZES:
+            cluster = factory()
+            for r in bench_small(system, cluster, clients, procs, size):
+                out_rows.append(r.row())

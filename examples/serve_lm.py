@@ -1,0 +1,12 @@
+"""Batched serving example: prefill + KV-cached decode over request waves.
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch mixtral-8x22b]
+"""
+
+import sys
+
+sys.argv = [sys.argv[0]] + (sys.argv[1:] or ["--arch", "mixtral-8x22b"])
+from repro.launch.serve import main  # noqa: E402
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""CFS core — the paper's contribution as an in-process distributed system.
+
+Public surface:
+    CfsCluster  — assemble a simulated deployment (RM + meta + data nodes)
+    CfsMount    — per-client relaxed-POSIX facade
+    CfsClient   — lower-level client (caches, workflows, file I/O)
+"""
+
+from .client import CfsClient, CfsFile, FsError, NotFound, Exists
+from .fs import CfsCluster, CfsMount
+from .simnet import LatencyModel, Network, SimClock
+from .types import PACKET_SIZE, SMALL_FILE_THRESHOLD
+
+__all__ = [
+    "CfsCluster", "CfsMount", "CfsClient", "CfsFile",
+    "FsError", "NotFound", "Exists",
+    "LatencyModel", "Network", "SimClock",
+    "PACKET_SIZE", "SMALL_FILE_THRESHOLD",
+]

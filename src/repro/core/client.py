@@ -1,0 +1,741 @@
+"""CFS client (paper §2.4, §2.6, §2.7) — the FUSE-process analogue.
+
+Runs "in user space with its own cache":
+
+* partition-routing cache — fetched from the RM at mount, refreshed by
+  explicit ``sync_partitions()`` (non-persistent connections, §2.5.2);
+* inode/dentry cache — filled on create/lookup/readdir, force-synced on open;
+* leader cache — last identified PB/raft leader per data partition; reads try
+  the cached leader first, then walk the replicas (§2.4).
+
+Metadata workflows follow Figure 3 exactly — inode first, dentry second, and
+on failure the inode goes to a *local orphan list* that is evicted later; all
+mutations are retried with a (client_id, seq) session so raft dedup keeps them
+exactly-once (§2.1.3).
+
+File I/O follows §2.7: sequential writes stream 128 KB packets to the PB
+leader of a randomly chosen writable data partition; random writes split into
+an overwrite part (raft, in-place, Fig. 5) and an append part (PB, Fig. 4);
+small files (≤128 KB at close) take the aggregated-extent path; deletes are
+asynchronous (mark, evict, punch holes / drop extents).
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from .extent_store import ExtentError
+from .meta_node import (DentryExists, MetaError, NoSuchDentry, NoSuchInode,
+                        PartitionFull, RangeExhausted)
+from .raft import NotCommitted, NotLeader
+from .simnet import NetError, Network
+from .types import (MAX_UINT64, PACKET_SIZE, ROOT_INODE,
+                    SMALL_FILE_THRESHOLD, ExtentKey, InodeType)
+
+__all__ = ["CfsClient", "CfsFile", "FsError", "NotFound", "Exists",
+           "NotADirectory", "IsADirectory", "DirNotEmpty"]
+
+MAX_RETRIES = 4
+
+
+class FsError(Exception):
+    pass
+
+
+class NotFound(FsError):
+    pass
+
+
+class Exists(FsError):
+    pass
+
+
+class NotADirectory(FsError):
+    pass
+
+
+class IsADirectory(FsError):
+    pass
+
+
+class DirNotEmpty(FsError):
+    pass
+
+
+@dataclass
+class _MetaPartition:
+    pid: int
+    start: int
+    end: int
+    replicas: List[str]
+    status: str
+
+
+@dataclass
+class _DataPartition:
+    pid: int
+    replicas: List[str]
+    status: str
+
+
+class CfsClient:
+    """One mounted volume from one container's point of view."""
+
+    def __init__(self, client_id: str, net: Network, rm: Any,
+                 meta_nodes: Dict[str, Any], data_nodes: Dict[str, Any],
+                 volume: str, rng_seed: int = 0):
+        self.client_id = client_id
+        self.net = net
+        self.rm = rm
+        self.meta_nodes = meta_nodes
+        self.data_nodes = data_nodes
+        self.volume = volume
+        self.rng = random.Random(rng_seed)
+        self._seq = 0
+        # ---- caches (§2.4) ----
+        self.meta_partitions: List[_MetaPartition] = []
+        self.data_partitions: List[_DataPartition] = []
+        self.leader_cache: Dict[str, str] = {}       # group id -> node id
+        self.dentry_cache: Dict[Tuple[int, str], Dict] = {}
+        self.inode_cache: Dict[int, Dict] = {}
+        self.orphan_inodes: List[int] = []           # local orphan list (§2.6)
+        self.stats = {"rm_calls": 0, "meta_calls": 0, "data_calls": 0,
+                      "cache_hits": 0, "retries": 0}
+        self.sync_partitions()
+
+    # ------------------------------------------------------------------ RM
+    def sync_partitions(self) -> None:
+        """One-shot RPC to the RM (non-persistent connection)."""
+        leader = self.rm.leader_id()
+        view = self.net.call(self.client_id, leader, self.rm.client_view,
+                             self.volume, kind="client.rm")
+        self.stats["rm_calls"] += 1
+        self.meta_partitions = [_MetaPartition(**m) for m in view["meta"]]
+        self.data_partitions = [_DataPartition(**d) for d in view["data"]]
+
+    def _next_seq(self) -> int:
+        self._seq += 1
+        return self._seq
+
+    # --------------------------------------------------------- meta routing
+    def _mp_for_inode(self, ino: int) -> _MetaPartition:
+        for mp in self.meta_partitions:
+            if mp.start <= ino <= mp.end:
+                return mp
+        self.sync_partitions()
+        for mp in self.meta_partitions:
+            if mp.start <= ino <= mp.end:
+                return mp
+        raise NotFound(f"no meta partition covers inode {ino}")
+
+    def _writable_mps(self) -> List[_MetaPartition]:
+        return [mp for mp in self.meta_partitions if mp.status == "rw"]
+
+    def _meta_propose(self, mp: _MetaPartition, payload: Any,
+                      seq: Optional[int] = None) -> Any:
+        """Mutating op through the partition's raft leader, with leader cache
+        + retry.  Session (client_id, seq) deduplicates retries."""
+        seq = self._next_seq() if seq is None else seq
+        gid = f"mp{mp.pid}"
+        order = self._replica_order(gid, mp.replicas)
+        last_err: Exception = NotFound(gid)
+        for attempt in range(MAX_RETRIES):
+            for nid in order:
+                try:
+                    res = self.net.call(
+                        self.client_id, nid, self.meta_nodes[nid].propose,
+                        mp.pid, payload, self.client_id, seq,
+                        kind="client.meta")
+                    self.stats["meta_calls"] += 1
+                    self.leader_cache[gid] = nid
+                    return res
+                except NotLeader as e:
+                    last_err = e
+                    if e.leader_hint and e.leader_hint in mp.replicas:
+                        order = [e.leader_hint]
+                    continue
+                except (NetError, NotCommitted) as e:
+                    last_err = e
+                    self.stats["retries"] += 1
+                    continue
+            order = list(mp.replicas)
+        raise last_err
+
+    def _meta_read(self, mp: _MetaPartition, op: str, *args: Any) -> Any:
+        gid = f"mp{mp.pid}"
+        order = self._replica_order(gid, mp.replicas)
+        last_err: Exception = NotFound(gid)
+        for nid in order:
+            try:
+                res = self.net.call(
+                    self.client_id, nid, self.meta_nodes[nid].read,
+                    mp.pid, op, *args, kind="client.meta")
+                self.stats["meta_calls"] += 1
+                self.leader_cache[gid] = nid
+                return res
+            except (NetError, KeyError) as e:
+                last_err = e
+                continue
+        raise last_err
+
+    def _replica_order(self, gid: str, replicas: List[str]) -> List[str]:
+        """Cached leader first, then the rest (paper §2.4 leader cache)."""
+        cached = self.leader_cache.get(gid)
+        if cached and cached in replicas:
+            return [cached] + [r for r in replicas if r != cached]
+        return list(replicas)
+
+    # --------------------------------------------------------- data routing
+    def _writable_dps(self) -> List[_DataPartition]:
+        dps = [dp for dp in self.data_partitions if dp.status == "rw"]
+        if not dps:
+            self.sync_partitions()
+            dps = [dp for dp in self.data_partitions if dp.status == "rw"]
+        if not dps:
+            # volume ran out of writable partitions — the RM auto-expands
+            # (§2.3.1 "automatically adds a set of new partitions")
+            leader = self.rm.leader_id()
+            self.net.call(self.client_id, leader, self.rm.check_volumes,
+                          kind="client.rm")
+            self.sync_partitions()
+            dps = [dp for dp in self.data_partitions if dp.status == "rw"]
+        if not dps:
+            raise FsError("no writable data partitions")
+        return dps
+
+    def _pick_dp(self) -> _DataPartition:
+        # the client selects partitions RANDOMLY from the RM-allocated set to
+        # avoid asking the RM for up-to-date utilization (§2.3.1)
+        return self.rng.choice(self._writable_dps())
+
+    def _dp(self, pid: int) -> _DataPartition:
+        for dp in self.data_partitions:
+            if dp.pid == pid:
+                return dp
+        self.sync_partitions()
+        for dp in self.data_partitions:
+            if dp.pid == pid:
+                return dp
+        raise NotFound(f"data partition {pid}")
+
+    def _data_call(self, dp: _DataPartition, method: str, *args: Any,
+                   nbytes: int = 256, leader_only: bool = True) -> Any:
+        gid = f"dp{dp.pid}"
+        order = self._replica_order(gid, dp.replicas)
+        if leader_only:
+            # PB leader is replicas[0] by construction; writes must start there
+            order = [dp.replicas[0]]
+        last_err: Exception = NotFound(gid)
+        for nid in order:
+            try:
+                res = self.net.call(
+                    self.client_id, nid,
+                    getattr(self.data_nodes[nid], method),
+                    dp.pid, *args, nbytes=nbytes, kind="client.data")
+                self.stats["data_calls"] += 1
+                self.leader_cache[gid] = nid
+                return res
+            except (NetError, NotLeader) as e:
+                last_err = e
+                self.stats["retries"] += 1
+                continue
+        raise last_err
+
+    # ============================================================ metadata ops
+    def create_inode(self, itype: int = InodeType.FILE,
+                     link_target: bytes = b"") -> Dict:
+        """Fig. 3 step 1: ask an available (random writable) meta partition."""
+        seq = self._next_seq()
+        mps = self._writable_mps()
+        self.rng.shuffle(mps)
+        last: Exception = FsError("no writable meta partitions")
+        for mp in mps:
+            try:
+                inode = self._meta_propose(
+                    mp, ("create_inode", itype, link_target, 0.0), seq=seq)
+                self.inode_cache[inode["inode"]] = inode
+                return inode
+            except (PartitionFull, RangeExhausted) as e:
+                last = e
+                continue
+        # every cached partition is full: ask the RM to split / expand,
+        # resync the routing table, then retry across the fresh view
+        leader = self.rm.leader_id()
+        self.net.call(self.client_id, leader, self.rm.check_volumes,
+                      kind="client.rm")
+        self.sync_partitions()
+        mps = self._writable_mps()
+        self.rng.shuffle(mps)
+        for mp in mps:
+            try:
+                inode = self._meta_propose(
+                    mp, ("create_inode", itype, link_target, 0.0), seq=seq)
+                self.inode_cache[inode["inode"]] = inode
+                return inode
+            except (PartitionFull, RangeExhausted) as e:
+                last = e
+                continue
+        raise last
+
+    def create(self, parent: int, name: str,
+               itype: int = InodeType.FILE, link_target: bytes = b"") -> Dict:
+        """Create-file workflow (Fig. 3 'create'): inode, then dentry; on
+        dentry failure unlink the inode and push it to the orphan list."""
+        inode = self.create_inode(itype, link_target)
+        ino = inode["inode"]
+        try:
+            self._create_dentry(parent, name, ino, itype)
+        except Exception:
+            # Fig. 3 failure arm: unlink + orphan-list + (later) evict
+            try:
+                mp = self._mp_for_inode(ino)
+                self._meta_propose(mp, ("unlink_dec", ino))
+            except Exception:
+                pass
+            self.orphan_inodes.append(ino)
+            raise
+        if itype == InodeType.DIR:
+            # subdirectory contributes ".." to the parent
+            self._meta_propose(self._mp_for_inode(parent), ("link_inc", parent))
+        self.dentry_cache[(parent, name)] = {
+            "parent": parent, "name": name, "inode": ino, "type": itype}
+        return inode
+
+    def _create_dentry(self, parent: int, name: str, ino: int,
+                       dtype: int) -> Dict:
+        """The dentry lives on the partition owning the PARENT inode —
+        inode and dentry of one file may be on different nodes (§2.6)."""
+        mp = self._mp_for_inode(parent)
+        try:
+            return self._meta_propose(
+                mp, ("create_dentry", parent, name, ino, dtype))
+        except DentryExists:
+            raise Exists(f"{parent}/{name}")
+
+    def link(self, ino: int, parent: int, name: str) -> Dict:
+        """Fig. 3 'link': nlink += 1 first, then the dentry; rollback on fail."""
+        mp_i = self._mp_for_inode(ino)
+        inode = self._meta_propose(mp_i, ("link_inc", ino))
+        try:
+            return self._create_dentry(parent, name, ino, inode["type"])
+        except Exception:
+            self._meta_propose(mp_i, ("unlink_dec", ino))
+            raise
+
+    def unlink(self, parent: int, name: str) -> Optional[int]:
+        """Fig. 3 'unlink': delete dentry FIRST; only then unlink the inode.
+        Returns the inode id if it reached the orphan/evict threshold."""
+        mp_p = self._mp_for_inode(parent)
+        try:
+            dentry = self._meta_propose(mp_p, ("delete_dentry", parent, name))
+        except NoSuchDentry:
+            raise NotFound(f"{parent}/{name}")
+        self.dentry_cache.pop((parent, name), None)
+        ino = dentry["inode"]
+        try:
+            mp_i = self._mp_for_inode(ino)
+            inode = self._meta_propose(mp_i, ("unlink_dec", ino))
+        except Exception:
+            # all retries failed: this inode is now an orphan the admin may
+            # need to resolve (§2.6.3); remember it locally regardless
+            self.orphan_inodes.append(ino)
+            return ino
+        thresh = 2 if inode["type"] == InodeType.DIR else 0
+        if inode["nlink"] <= thresh:
+            self.orphan_inodes.append(ino)
+        self.inode_cache.pop(ino, None)
+        return ino
+
+    def evict_orphans(self) -> int:
+        """Send evict for locally tracked orphans; free their data (async)."""
+        evicted = 0
+        remaining: List[int] = []
+        for ino in self.orphan_inodes:
+            try:
+                mp = self._mp_for_inode(ino)
+                res = self._meta_propose(mp, ("evict", ino))
+                if res["ok"]:
+                    evicted += 1
+                    self._free_extents(res["extents"], res["size"])
+                # not ok => inode still live (e.g. relinked); drop it either way
+            except Exception:
+                remaining.append(ino)
+        self.orphan_inodes = remaining
+        return evicted
+
+    def _free_extents(self, extents: List[Tuple], size: int) -> None:
+        """§2.7.3 cleanup: large-file extents are deleted outright; small-file
+        content is punch-holed out of its shared extent."""
+        for (pid, eid, _foff, eoff, esize) in extents:
+            try:
+                dp = self._dp(pid)
+            except NotFound:
+                continue
+            small = esize <= SMALL_FILE_THRESHOLD and eoff != 0 or (
+                esize < SMALL_FILE_THRESHOLD and size <= SMALL_FILE_THRESHOLD)
+            for nid in dp.replicas:
+                try:
+                    if small:
+                        self.net.call(self.client_id, nid,
+                                      self.data_nodes[nid].serve_punch_hole,
+                                      pid, eid, eoff, esize, kind="client.data")
+                    else:
+                        self.net.call(self.client_id, nid,
+                                      self.data_nodes[nid].serve_delete_extent,
+                                      pid, eid, kind="client.data")
+                except NetError:
+                    continue
+
+    # ---- lookups -------------------------------------------------------------
+    def lookup(self, parent: int, name: str, use_cache: bool = True) -> Dict:
+        if use_cache and (parent, name) in self.dentry_cache:
+            self.stats["cache_hits"] += 1
+            return self.dentry_cache[(parent, name)]
+        mp = self._mp_for_inode(parent)
+        try:
+            d = self._meta_read(mp, "lookup", parent, name)
+        except NoSuchDentry:
+            self.dentry_cache.pop((parent, name), None)
+            raise NotFound(f"{parent}/{name}")
+        self.dentry_cache[(parent, name)] = d
+        return d
+
+    def get_inode(self, ino: int, use_cache: bool = False) -> Dict:
+        if use_cache and ino in self.inode_cache:
+            self.stats["cache_hits"] += 1
+            return self.inode_cache[ino]
+        mp = self._mp_for_inode(ino)
+        try:
+            inode = self._meta_read(mp, "get_inode", ino)
+        except NoSuchInode:
+            raise NotFound(f"inode {ino}")
+        self.inode_cache[ino] = inode
+        return inode
+
+    def readdir(self, parent: int) -> List[Dict]:
+        mp = self._mp_for_inode(parent)
+        return self._meta_read(mp, "read_dir", parent)
+
+    def readdir_plus(self, parent: int) -> List[Dict]:
+        """DirStat path (§4.2): readdir, then ONE batchInodeGet per meta
+        partition instead of per-file inodeGet; results cached client-side."""
+        dentries = self.readdir(parent)
+        by_mp: Dict[int, List[int]] = {}
+        missing = []
+        out: Dict[int, Dict] = {}
+        for d in dentries:
+            ino = d["inode"]
+            if ino in self.inode_cache:
+                self.stats["cache_hits"] += 1
+                out[ino] = self.inode_cache[ino]
+            else:
+                missing.append(ino)
+        for ino in missing:
+            mp = self._mp_for_inode(ino)
+            by_mp.setdefault(mp.pid, []).append(ino)
+        for pid, inos in by_mp.items():
+            mp = next(m for m in self.meta_partitions if m.pid == pid)
+            for iv in self._meta_read(mp, "batch_inode_get", inos):
+                self.inode_cache[iv["inode"]] = iv
+                out[iv["inode"]] = iv
+        return [
+            {**d, "attr": out.get(d["inode"])} for d in dentries
+        ]
+
+    def update_extents(self, ino: int, size: int,
+                       extents: List[ExtentKey]) -> Dict:
+        mp = self._mp_for_inode(ino)
+        inode = self._meta_propose(
+            mp, ("update_extents", ino, size,
+                 [e.as_tuple() for e in extents], 0.0))
+        self.inode_cache[ino] = inode
+        return inode
+
+    # ============================================================== file I/O
+    def open(self, ino: int, mode: str = "r") -> "CfsFile":
+        """Open forces the cached metadata to re-sync with the meta node
+        (§2.4: 'when a file is opened for read/write, the client will force
+        the cached metadata to be synchronous')."""
+        inode = self.get_inode(ino, use_cache=False)
+        if inode["type"] == InodeType.DIR:
+            raise IsADirectory(str(ino))
+        return CfsFile(self, inode, mode)
+
+    # -- internal write paths used by CfsFile
+    def _append_packets(self, data: bytes,
+                        state: Optional[Tuple[int, int, int]] = None
+                        ) -> Tuple[List[ExtentKey], Tuple[int, int, int]]:
+        """Stream ``data`` as ≤128 KB packets (Fig. 4).  ``state`` carries
+        (partition_id, extent_id, extent_write_offset) across calls so a file
+        keeps appending to its current extent.  Returns new extent keys and
+        the updated state.  On partition failure the remaining k−p bytes are
+        re-sent to a NEW extent on a different partition (§2.2.5)."""
+        keys: List[ExtentKey] = []
+        pos = 0
+        if state is None:
+            dp = self._pick_dp()
+            eid = self._new_extent_id(dp)
+            state = (dp.pid, eid, 0)
+        pid, eid, eoff = state
+        zero_progress = 0
+        while pos < len(data):
+            packet = data[pos : pos + PACKET_SIZE]
+            dp = self._dp(pid)
+            try:
+                res = self._data_call(dp, "serve_append", eid, eoff, packet,
+                                      True, nbytes=len(packet) + 128)
+                accepted = res.accepted
+            except ExtentError as e:
+                if "full" in str(e):
+                    # extent reached its size cap — healthy; roll to a fresh
+                    # extent on the same partition, no fault report
+                    eid = self._new_extent_id(dp)
+                    eoff = 0
+                    continue
+                accepted = 0
+            except (NetError, FsError):
+                accepted = 0
+            if accepted > 0:
+                keys.append(ExtentKey(pid, eid, -1, eoff, accepted))
+                eoff += accepted
+                pos += accepted
+                zero_progress = 0
+            else:
+                zero_progress += 1
+                if zero_progress > 2 * MAX_RETRIES:
+                    raise FsError(
+                        f"append made no progress after {zero_progress} "
+                        f"partition switches (committed {pos}/{len(data)})")
+            if accepted < len(packet):
+                # partial/failed commit: mark RO via RM and move to a fresh
+                # extent on another partition for the remaining bytes
+                try:
+                    leader = self.rm.leader_id()
+                    self.net.call(self.client_id, leader,
+                                  self.rm.report_timeout, pid, kind="client.rm")
+                except NetError:
+                    pass
+                self.sync_partitions()
+                dp = self._pick_dp()
+                pid = dp.pid
+                eid = self._new_extent_id(dp)
+                eoff = 0
+        return keys, (pid, eid, eoff)
+
+    _extent_counter = 0
+
+    def _new_extent_id(self, dp: _DataPartition) -> int:
+        """Client-generated unique extent id (partition-scoped uniqueness is
+        what matters; ids are chosen so clients never collide)."""
+        CfsClient._extent_counter += 1
+        return (hash(self.client_id) & 0xFFFF) * 1_000_000 + CfsClient._extent_counter
+
+    def _write_small_file(self, data: bytes) -> List[ExtentKey]:
+        for _ in range(2 * MAX_RETRIES):
+            dp = self._pick_dp()
+            try:
+                eid, off, committed = self._data_call(
+                    dp, "serve_small_write", data, nbytes=len(data) + 128)
+            except (NetError, FsError, ExtentError):
+                # replica-local RO/failure: report so the RM flips the hard
+                # status (and expands the volume if needed), then retry
+                self.stats["retries"] += 1
+                try:
+                    leader = self.rm.leader_id()
+                    self.net.call(self.client_id, leader,
+                                  self.rm.report_timeout, dp.pid,
+                                  kind="client.rm")
+                except NetError:
+                    pass
+                self.sync_partitions()
+                continue
+            if committed >= len(data):
+                return [ExtentKey(dp.pid, eid, 0, off, len(data))]
+            # failed mid-chain: partition went RO; retry elsewhere (the
+            # committed copy is unreferenced garbage reclaimed by punch-hole)
+            self.sync_partitions()
+        raise FsError("small write failed on all partitions")
+
+    def read_extents(self, inode: Dict, offset: int, size: int) -> bytes:
+        """Read [offset, offset+size) of a file: map to extent keys, fetch
+        from each partition's leader (leader cache, walk replicas on miss)."""
+        size = min(size, inode["size"] - offset)
+        if size <= 0:
+            return b""
+        out = bytearray()
+        need_lo, need_hi = offset, offset + size
+        for (pid, eid, foff, eoff, esize) in inode["extents"]:
+            seg_lo, seg_hi = foff, foff + esize
+            lo, hi = max(need_lo, seg_lo), min(need_hi, seg_hi)
+            if lo >= hi:
+                continue
+            dp = self._dp(pid)
+            chunk = self._read_one(dp, eid, eoff + (lo - seg_lo), hi - lo)
+            out.extend(chunk)
+        return bytes(out)
+
+    def _read_one(self, dp: _DataPartition, eid: int, eoff: int,
+                  size: int) -> bytes:
+        gid = f"dp{dp.pid}"
+        order = self._replica_order(gid, dp.replicas)
+        last_err: Exception = NotFound(gid)
+        for nid in order:
+            try:
+                res = self.net.call(
+                    self.client_id, nid, self.data_nodes[nid].serve_read,
+                    dp.pid, eid, eoff, size,
+                    nbytes=128, reply_bytes=size + 64, kind="client.data")
+                self.stats["data_calls"] += 1
+                self.leader_cache[gid] = nid
+                return res
+            except (NetError, ExtentError) as e:
+                last_err = e
+                continue
+        raise last_err
+
+
+class CfsFile:
+    """An open file handle: buffering, packetization, small/large decision."""
+
+    def __init__(self, client: CfsClient, inode: Dict, mode: str):
+        self.client = client
+        self.inode = inode
+        self.mode = mode
+        self.pos = inode["size"] if "a" in mode else 0
+        self._buf = bytearray()
+        self._buf_start = inode["size"]     # appends buffer from EOF
+        self._stream_state: Optional[Tuple[int, int, int]] = None
+        self._extents: List[ExtentKey] = [ExtentKey(*e) for e in inode["extents"]]
+        self._size = inode["size"]
+        self._dirty = False
+
+    # ---- write ---------------------------------------------------------------
+    def write(self, data: bytes) -> int:
+        if "r" == self.mode:
+            raise FsError("read-only handle")
+        eof = self._buf_start + len(self._buf)
+        if self.pos == eof:
+            self._write_append(data)
+        elif self.pos > eof:
+            # sparse gap: fill with zeros then append (simplification)
+            self._write_append(b"\x00" * (self.pos - eof))
+            self._write_append(data)
+        else:
+            # rewound into existing content: make everything durable first,
+            # then split into overwrite + append (Fig. 5)
+            self._flush_full_packets(force=True)
+            self._write_random(data)
+        self.pos += len(data)
+        self._dirty = True
+        return len(data)
+
+    def _write_append(self, data: bytes) -> None:
+        self._buf.extend(data)
+        # once the file is clearly not-small, stream out full packets
+        if self._buf_start + len(self._buf) > SMALL_FILE_THRESHOLD or \
+                self._extents:
+            self._flush_full_packets()
+
+    def _flush_full_packets(self, force: bool = False) -> None:
+        cut = len(self._buf) if force else (len(self._buf) // PACKET_SIZE) * PACKET_SIZE
+        if cut == 0:
+            return
+        chunk = bytes(self._buf[:cut])
+        del self._buf[:cut]
+        keys, self._stream_state = self.client._append_packets(
+            chunk, self._stream_state)
+        foff = self._buf_start
+        for k in keys:
+            k.file_offset = foff
+            foff += k.size
+        self._buf_start = foff
+        self._extents.extend(keys)
+        self._size = max(self._size, foff)
+
+    def _write_random(self, data: bytes) -> None:
+        """Fig. 5: split into overwrite (in-place, raft) + append parts."""
+        overlap = min(self._size - self.pos, len(data))
+        if overlap > 0:
+            self._overwrite_range(self.pos, data[:overlap])
+        if overlap < len(data):
+            self._flush_full_packets(force=True)
+            self._write_append(data[overlap:])
+
+    def _overwrite_range(self, file_off: int, data: bytes) -> None:
+        """In-place overwrite: 'the offset of the file on the data partition
+        does not change' — route each covered extent-piece to its raft group."""
+        pos = 0
+        for k in self._extents:
+            seg_lo, seg_hi = k.file_offset, k.file_offset + k.size
+            lo = max(file_off, seg_lo)
+            hi = min(file_off + len(data), seg_hi)
+            if lo >= hi:
+                continue
+            piece = data[lo - file_off : hi - file_off]
+            dp = self.client._dp(k.partition_id)
+            self.client._data_call(
+                dp, "serve_overwrite", k.extent_id,
+                k.extent_offset + (lo - seg_lo), piece,
+                nbytes=len(piece) + 128)
+            pos += len(piece)
+
+    # ---- read ------------------------------------------------------------------
+    def read(self, size: int = -1) -> bytes:
+        self.flush()
+        inode = {"size": self._size,
+                 "extents": [k.as_tuple() for k in self._extents]}
+        if size < 0:
+            size = self._size - self.pos
+        data = self.client.read_extents(inode, self.pos, size)
+        self.pos += len(data)
+        return data
+
+    def seek(self, pos: int) -> None:
+        self.pos = pos
+
+    def truncate(self) -> None:
+        """O_TRUNC: drop all content (mode "w" on an existing file).  Old
+        extents are freed asynchronously like any delete (§2.7.3)."""
+        if self._extents:
+            self.client._free_extents([k.as_tuple() for k in self._extents],
+                                      self._size)
+        self._extents = []
+        self._size = 0
+        self._buf_start = 0
+        self._buf.clear()
+        self._stream_state = None
+        self.pos = 0
+        self._dirty = True
+
+    # ---- flush / fsync / close ----------------------------------------------------
+    def flush(self) -> None:
+        """Push buffered bytes out.  A never-streamed file that stayed ≤128 KB
+        takes the small-file aggregated path."""
+        if self._buf:
+            if not self._extents and self._buf_start + len(self._buf) <= SMALL_FILE_THRESHOLD:
+                keys = self.client._write_small_file(bytes(self._buf))
+                for k in keys:
+                    k.file_offset = self._buf_start
+                self._extents.extend(keys)
+                self._size = self._buf_start + len(self._buf)
+                self._buf_start = self._size
+                self._buf.clear()
+            else:
+                self._flush_full_packets(force=True)
+
+    def fsync(self) -> None:
+        """fsync(): flush data AND synchronize the meta node (§2.7.1)."""
+        self.flush()
+        if self._dirty:
+            self.client.update_extents(self.inode["inode"], self._size,
+                                       self._extents)
+            self._dirty = False
+
+    def close(self) -> None:
+        self.fsync()
+
+    @property
+    def size(self) -> int:
+        return max(self._size, self._buf_start + len(self._buf))

@@ -1,0 +1,311 @@
+"""Cluster assembly + path-level POSIX-like API (relaxed semantics, §2.7).
+
+``CfsCluster`` wires up the whole simulated deployment (Figure 1): a 3-replica
+resource manager, N meta nodes, M data nodes, the raft fabric, and hands out
+``CfsMount`` objects — one per container/client.
+
+``CfsMount`` resolves paths to inodes by walking dentries from the root and
+exposes open/read/write/mkdir/readdir/stat/unlink/rename/link/symlink.
+Consistency is the paper's: sequential consistency per file op, no leases, no
+cross-client write atomicity for overlapping ranges.
+"""
+
+from __future__ import annotations
+
+import posixpath
+from typing import Any, Dict, List, Optional, Tuple
+
+from .client import (CfsClient, CfsFile, DirNotEmpty, Exists, FsError,
+                     IsADirectory, NotADirectory, NotFound)
+from .data_node import DataNode
+from .meta_node import MetaNode
+from .multiraft import RaftCluster
+from .resource_manager import ResourceManager
+from .simnet import LatencyModel, Network
+from .types import ROOT_INODE, InodeType
+
+__all__ = ["CfsCluster", "CfsMount"]
+
+
+class CfsCluster:
+    """A whole simulated CFS deployment on one box."""
+
+    def __init__(
+        self,
+        n_meta: int = 4,
+        n_data: int = 6,
+        n_rm: int = 3,
+        meta_mem_capacity: int = 64 * 1024 * 1024,
+        data_disk_capacity: int = 1024 * 1024 * 1024,
+        meta_max_entries: int = 1 << 20,
+        extent_max_size: int = 8 * 1024 * 1024,
+        raft_set_size: int = 6,
+        latency: Optional[LatencyModel] = None,
+        seed: int = 0,
+    ):
+        self.net = Network(model=latency, seed=seed)
+        self.rc = RaftCluster(self.net)
+        self.meta_nodes: Dict[str, MetaNode] = {}
+        self.data_nodes: Dict[str, DataNode] = {}
+        self.directory: Dict[str, Any] = {}
+        self.meta_max_entries = meta_max_entries
+        self.extent_max_size = extent_max_size
+        self.raft_set_size = raft_set_size
+        self._client_count = 0
+
+        rm_ids = [f"rm{i}" for i in range(n_rm)]
+        self.rm = ResourceManager(self.net, self.rc, rm_ids, self.directory,
+                                  meta_max_entries=meta_max_entries,
+                                  extent_max_size=extent_max_size)
+        self.rc.elect(ResourceManager.GROUP)
+
+        for i in range(n_meta):
+            self.add_meta_node(mem_capacity=meta_mem_capacity)
+        for i in range(n_data):
+            self.add_data_node(disk_capacity=data_disk_capacity)
+
+    # ---- capacity expansion (the no-rebalancing scenario) ---------------------
+    def add_meta_node(self, mem_capacity: int = 64 * 1024 * 1024) -> MetaNode:
+        i = len(self.meta_nodes)
+        zone = f"set{i // self.raft_set_size}"   # raft sets (§2.5.1)
+        node = MetaNode(f"m{i}", self.net, self.meta_nodes, self.rc.registry,
+                        mem_capacity=mem_capacity, zone=zone)
+        self.rm.register_node(node)
+        return node
+
+    def add_data_node(self, disk_capacity: int = 1024 * 1024 * 1024) -> DataNode:
+        i = len(self.data_nodes)
+        zone = f"set{i // self.raft_set_size}"
+        node = DataNode(f"d{i}", self.net, self.data_nodes, self.rc.registry,
+                        disk_capacity=disk_capacity, zone=zone)
+        self.rm.register_node(node)
+        return node
+
+    # ---- volumes ---------------------------------------------------------------
+    def create_volume(self, name: str, n_meta_partitions: int = 3,
+                      n_data_partitions: int = 10) -> None:
+        self.rm.create_volume(name, n_meta=n_meta_partitions,
+                              n_data=n_data_partitions)
+        # initialize the root directory inode (id 1) on the partition whose
+        # inode range covers id 1
+        boot = CfsClient("boot", self.net, self.rm, self.meta_nodes,
+                         self.data_nodes, name)
+        mp = boot._mp_for_inode(ROOT_INODE)
+        root = boot._meta_propose(mp, ("create_inode", InodeType.DIR, b"", 0.0))
+        assert root["inode"] == ROOT_INODE, root
+
+    def mount(self, volume: str, client_id: Optional[str] = None) -> "CfsMount":
+        self._client_count += 1
+        cid = client_id or f"client{self._client_count}"
+        client = CfsClient(cid, self.net, self.rm, self.meta_nodes,
+                           self.data_nodes, volume,
+                           rng_seed=self._client_count)
+        return CfsMount(client)
+
+    # ---- time / background work ---------------------------------------------------
+    def tick(self, n: int = 1) -> None:
+        """Advance raft timers + heartbeats + RM housekeeping."""
+        for _ in range(n):
+            self.rc.tick_all()
+            for node in list(self.meta_nodes.values()):
+                if node.node_id in self.net.dead_nodes:
+                    continue
+                try:
+                    self.rm.heartbeat(node.heartbeat_payload())
+                except Exception:
+                    pass
+            for node in list(self.data_nodes.values()):
+                if node.node_id in self.net.dead_nodes:
+                    continue
+                try:
+                    self.rm.heartbeat(node.heartbeat_payload())
+                except Exception:
+                    pass
+        try:
+            self.rm.check_volumes()
+        except Exception:
+            pass
+
+    def run_background_tasks(self) -> int:
+        """Punch-hole workers etc.  Returns bytes freed."""
+        return sum(n.background_tasks() for n in self.data_nodes.values()
+                   if n.node_id not in self.net.dead_nodes)
+
+    # ---- fault injection helpers ------------------------------------------------------
+    def kill_node(self, node_id: str) -> None:
+        self.net.kill(node_id)
+
+    def revive_node(self, node_id: str) -> None:
+        self.net.revive(node_id)
+
+    def recover_data_node(self, node_id: str) -> None:
+        """§2.2.5 recovery: align extents from each partition's PB leader,
+        then raft replay happens on subsequent ticks."""
+        self.net.revive(node_id)
+        node = self.data_nodes[node_id]
+        for pid, rep in node.partitions.items():
+            leader_nid = rep.replicas[0]
+            if leader_nid == node_id or leader_nid in self.net.dead_nodes:
+                continue
+            leader_rep = self.data_nodes[leader_nid].partitions[pid]
+            rep.recover_from_leader(leader_rep)
+
+
+class CfsMount:
+    """Path-level relaxed-POSIX facade over a CfsClient."""
+
+    def __init__(self, client: CfsClient):
+        self.client = client
+
+    # ---- path resolution -------------------------------------------------------
+    def _resolve(self, path: str, parent_only: bool = False
+                 ) -> Tuple[int, str, Optional[Dict]]:
+        """Returns (parent_ino, leaf_name, dentry|None)."""
+        path = posixpath.normpath(path)
+        if not path.startswith("/"):
+            raise FsError(f"path must be absolute: {path}")
+        if path == "/":
+            return (0, "/", {"parent": 0, "name": "/", "inode": ROOT_INODE,
+                             "type": InodeType.DIR})
+        parts = [p for p in path.split("/") if p]
+        parent = ROOT_INODE
+        for comp in parts[:-1]:
+            d = self.client.lookup(parent, comp)
+            if d["type"] != InodeType.DIR:
+                raise NotADirectory(comp)
+            parent = d["inode"]
+        leaf = parts[-1]
+        if parent_only:
+            return (parent, leaf, None)
+        try:
+            # the leaf lookup is authoritative (a stale dentry cache entry
+            # must not resurrect a file another client unlinked); directory
+            # components above used the cache
+            dentry = self.client.lookup(parent, leaf, use_cache=False)
+        except NotFound:
+            dentry = None
+        return (parent, leaf, dentry)
+
+    def path_inode(self, path: str) -> int:
+        _, _, d = self._resolve(path)
+        if d is None:
+            raise NotFound(path)
+        return d["inode"]
+
+    # ---- file ops ------------------------------------------------------------------
+    def create(self, path: str) -> CfsFile:
+        parent, leaf, dentry = self._resolve(path)
+        if dentry is not None:
+            raise Exists(path)
+        inode = self.client.create(parent, leaf, InodeType.FILE)
+        return CfsFile(self.client, inode, "w")
+
+    def open(self, path: str, mode: str = "r") -> CfsFile:
+        parent, leaf, dentry = self._resolve(path)
+        if dentry is None:
+            if "w" in mode or "a" in mode:
+                inode = self.client.create(parent, leaf, InodeType.FILE)
+                return CfsFile(self.client, inode, mode)
+            raise NotFound(path)
+        if dentry["type"] == InodeType.DIR:
+            raise IsADirectory(path)
+        f = self.client.open(dentry["inode"], mode)
+        if mode.startswith("w"):      # POSIX O_TRUNC semantics
+            f.truncate()
+        return f
+
+    def write_file(self, path: str, data: bytes) -> None:
+        f = self.open(path, "w")
+        f.write(data)
+        f.close()
+
+    def read_file(self, path: str) -> bytes:
+        f = self.open(path, "r")
+        return f.read()
+
+    def unlink(self, path: str) -> None:
+        parent, leaf, dentry = self._resolve(path)
+        if dentry is None:
+            raise NotFound(path)
+        if dentry["type"] == InodeType.DIR:
+            raise IsADirectory(path)
+        self.client.unlink(parent, leaf)
+        self.client.evict_orphans()
+
+    def link(self, src: str, dst: str) -> None:
+        src_ino = self.path_inode(src)
+        parent, leaf, dentry = self._resolve(dst)
+        if dentry is not None:
+            raise Exists(dst)
+        self.client.link(src_ino, parent, leaf)
+
+    def symlink(self, target: str, linkpath: str) -> None:
+        parent, leaf, dentry = self._resolve(linkpath)
+        if dentry is not None:
+            raise Exists(linkpath)
+        self.client.create(parent, leaf, InodeType.SYMLINK,
+                           link_target=target.encode())
+
+    def readlink(self, path: str) -> str:
+        ino = self.path_inode(path)
+        inode = self.client.get_inode(ino)
+        if inode["type"] != InodeType.SYMLINK:
+            raise FsError(f"not a symlink: {path}")
+        return inode["link_target"].decode()
+
+    def rename(self, src: str, dst: str) -> None:
+        """link(dst -> inode) then unlink(src) — not atomic across partitions,
+        matching the paper's relaxed metadata atomicity."""
+        src_parent, src_leaf, src_dentry = self._resolve(src)
+        if src_dentry is None:
+            raise NotFound(src)
+        dst_parent, dst_leaf, dst_dentry = self._resolve(dst)
+        if dst_dentry is not None:
+            raise Exists(dst)
+        self.client.link(src_dentry["inode"], dst_parent, dst_leaf)
+        self.client.unlink(src_parent, src_leaf)
+
+    # ---- directory ops -----------------------------------------------------------------
+    def mkdir(self, path: str) -> int:
+        parent, leaf, dentry = self._resolve(path)
+        if dentry is not None:
+            raise Exists(path)
+        inode = self.client.create(parent, leaf, InodeType.DIR)
+        return inode["inode"]
+
+    def rmdir(self, path: str) -> None:
+        parent, leaf, dentry = self._resolve(path)
+        if dentry is None:
+            raise NotFound(path)
+        if dentry["type"] != InodeType.DIR:
+            raise NotADirectory(path)
+        if self.client.readdir(dentry["inode"]):
+            raise DirNotEmpty(path)
+        self.client.unlink(parent, leaf)
+        # the removed dir no longer contributes ".." to its parent
+        mp = self.client._mp_for_inode(parent)
+        self.client._meta_propose(mp, ("unlink_dec", parent))
+        self.client.evict_orphans()
+
+    def readdir(self, path: str) -> List[str]:
+        ino = self.path_inode(path)
+        return [d["name"] for d in self.client.readdir(ino)]
+
+    def dir_stat(self, path: str) -> List[Dict]:
+        """readdir + attrs — the mdtest DirStat operation (batchInodeGet)."""
+        ino = self.path_inode(path)
+        return self.client.readdir_plus(ino)
+
+    def stat(self, path: str) -> Dict:
+        return self.client.get_inode(self.path_inode(path))
+
+    def exists(self, path: str) -> bool:
+        try:
+            self.path_inode(path)
+            return True
+        except (NotFound, NotADirectory):
+            return False
+
+    # ---- maintenance ---------------------------------------------------------------------
+    def evict_orphans(self) -> int:
+        return self.client.evict_orphans()

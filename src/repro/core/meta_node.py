@@ -1,0 +1,353 @@
+"""Meta nodes and meta partitions (paper §2.1, §2.6).
+
+A meta partition is an in-memory store of the inodes and dentries of one
+volume slice, held in two b-trees (``inodeTree`` keyed by inode id,
+``dentryTree`` keyed by (parent inode id, name)), replicated with MultiRaft,
+persisted by snapshot+log (raft log compaction gives the paper's
+"snapshots and logs ... log compaction" for free).
+
+Each partition owns an inode-id range [start, end]; ids are allocated as
+"the smallest inode id that has not been used so far" per §2.6.1 — we keep a
+cursor plus the paper's ``freeList`` of deleted ids.  Splitting (Algorithm 1)
+is driven by the resource manager, which *cuts off* the range of the old
+partition at ``maxInodeID + Δ`` and creates a sibling covering
+``[end+1, ∞)`` — ids stay unique without moving any existing metadata
+(the heart of the no-rebalancing claim for capacity expansion).
+
+Relaxed metadata atomicity (§2.6): inode and dentry of one file may live on
+*different* partitions/nodes, so create/link/unlink are multi-step client
+workflows, not transactions.  The invariant maintained is one-directional:
+a dentry always references an inode that was created first; failures can only
+leave orphan *inodes* (never dangling dentries), which the client evicts.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+from .btree import BTree
+from .multiraft import MultiRaftHost
+from .raft import StateMachine
+from .simnet import Network
+from .types import MAX_UINT64, Dentry, Inode, InodeFlag, InodeType
+
+__all__ = ["MetaNode", "MetaPartitionSM", "MetaError", "NoSuchInode",
+           "NoSuchDentry", "DentryExists"]
+
+# rough per-entry memory cost used for utilization-based placement
+INODE_MEM_BYTES = 300
+DENTRY_MEM_BYTES = 120
+
+
+class MetaError(Exception):
+    pass
+
+
+class NoSuchInode(MetaError):
+    pass
+
+
+class NoSuchDentry(MetaError):
+    pass
+
+
+class DentryExists(MetaError):
+    pass
+
+
+class RangeExhausted(MetaError):
+    """Inode cursor hit the partition's (cut-off) range end."""
+
+
+class PartitionFull(MetaError):
+    """Entry-count threshold reached: no NEW files, mutations still allowed."""
+
+
+class MetaPartitionSM(StateMachine):
+    """Replicated state machine of one meta partition."""
+
+    def __init__(self, partition_id: int, volume: str,
+                 start: int, end: int, max_entries: int = 1 << 20):
+        self.partition_id = partition_id
+        self.volume = volume
+        self.start = start
+        self.end = end                      # MAX_UINT64 until split cuts it
+        self.cursor = start - 1             # last allocated inode id
+        self.inode_tree = BTree()
+        self.dentry_tree = BTree()
+        self.free_list: List[int] = []      # paper's freeList
+        self.max_entries = max_entries
+
+    # ---- sizing (drives placement + splitting) ------------------------------
+    @property
+    def entries(self) -> int:
+        return len(self.inode_tree) + len(self.dentry_tree)
+
+    def mem_bytes(self) -> int:
+        return (len(self.inode_tree) * INODE_MEM_BYTES
+                + len(self.dentry_tree) * DENTRY_MEM_BYTES)
+
+    @property
+    def max_inode_id(self) -> int:
+        return self.cursor
+
+    def writable(self) -> bool:
+        return self.entries < self.max_entries and self.cursor < self.end
+
+    # ---- raft apply ----------------------------------------------------------
+    def apply(self, payload: Any) -> Any:
+        op, args = payload[0], payload[1:]
+        return getattr(self, "_ap_" + op)(*args)
+
+    # -- inode ops
+    def _ap_create_inode(self, itype: int, link_target: bytes, now: float) -> Dict:
+        if not self.writable():
+            if self.cursor >= self.end:
+                raise RangeExhausted(str(self.partition_id))
+            raise PartitionFull(str(self.partition_id))
+        if self.free_list:
+            ino = self.free_list.pop()       # smallest-unused-id spirit (§2.6.1)
+        else:
+            self.cursor += 1
+            ino = self.cursor
+        nlink = 2 if itype == InodeType.DIR else 1
+        inode = Inode(inode=ino, type=itype, link_target=link_target,
+                      nlink=nlink, ctime=now, mtime=now)
+        self.inode_tree.put(ino, inode)
+        return _inode_view(inode)
+
+    def _ap_link_inc(self, ino: int) -> Dict:
+        inode = self._inode(ino)
+        inode.nlink += 1
+        inode.gen += 1
+        return _inode_view(inode)
+
+    def _ap_unlink_dec(self, ino: int) -> Dict:
+        """Decrease nlink; at the threshold (0 file / 2 dir) mark deleted."""
+        inode = self._inode(ino)
+        inode.nlink = max(0, inode.nlink - 1)
+        inode.gen += 1
+        thresh = 2 if inode.type == InodeType.DIR else 0
+        if inode.nlink <= thresh and inode.type != InodeType.DIR:
+            inode.flag = InodeFlag.MARK_DELETED
+        if inode.type == InodeType.DIR and inode.nlink <= 2:
+            inode.flag = InodeFlag.MARK_DELETED
+        return _inode_view(inode)
+
+    def _ap_evict(self, ino: int) -> Dict:
+        """Client-driven eviction of marked/orphan inodes (§2.6.1/2.6.3);
+        returns the extent keys so the caller can free data asynchronously
+        (§2.7.3's separate cleanup process)."""
+        inode = self.inode_tree.get(ino)
+        if inode is None:
+            return {"ok": False, "extents": [], "size": 0}
+        if inode.flag != InodeFlag.MARK_DELETED and inode.nlink > 0:
+            return {"ok": False, "extents": [], "size": 0}
+        self.inode_tree.delete(ino)
+        self.free_list.append(ino)
+        return {"ok": True, "size": inode.size,
+                "extents": [e.as_tuple() for e in inode.extents]}
+
+    def _ap_update_extents(self, ino: int, size: int,
+                           extents: List[Tuple[int, int, int, int, int]],
+                           mtime: float) -> Dict:
+        from .types import ExtentKey
+        inode = self._inode(ino)
+        inode.size = size
+        inode.extents = [ExtentKey(*e) for e in extents]
+        inode.mtime = mtime
+        inode.gen += 1
+        return _inode_view(inode)
+
+    # -- dentry ops
+    def _ap_create_dentry(self, parent: int, name: str, ino: int, dtype: int) -> Dict:
+        key = (parent, name)
+        if key in self.dentry_tree:
+            existing: Dentry = self.dentry_tree.get(key)
+            if existing.inode == ino:
+                return _dentry_view(existing)   # idempotent replay
+            raise DentryExists(f"{parent}/{name}")
+        # NOTE: no writable() check — a dentry must live with its parent
+        # inode's partition, and a "full" partition still accepts
+        # modifications (§2.3.1: "it can still be modified or deleted");
+        # only NEW inode allocation is blocked.
+        d = Dentry(parent_id=parent, name=name, inode=ino, type=dtype)
+        self.dentry_tree.put(key, d)
+        # a directory gains nlink via its child's ".."; handled by client calling
+        # link_inc on the parent for subdirectories.
+        return _dentry_view(d)
+
+    def _ap_delete_dentry(self, parent: int, name: str) -> Dict:
+        key = (parent, name)
+        d: Optional[Dentry] = self.dentry_tree.get(key)
+        if d is None:
+            raise NoSuchDentry(f"{parent}/{name}")
+        self.dentry_tree.delete(key)
+        return _dentry_view(d)
+
+    def _ap_set_end(self, end: int) -> int:
+        """Algorithm 1 step: cut off the inode range at ``end``."""
+        self.end = end
+        return end
+
+    # ---- reads (leader-local, not proposed) ------------------------------------
+    def _inode(self, ino: int) -> Inode:
+        inode = self.inode_tree.get(ino)
+        if inode is None:
+            raise NoSuchInode(str(ino))
+        return inode
+
+    def get_inode(self, ino: int) -> Dict:
+        return _inode_view(self._inode(ino))
+
+    def batch_inode_get(self, inos: List[int]) -> List[Dict]:
+        """The paper's batchInodeGet (§4.2, DirStat discussion): one RPC
+        fetches many inodes instead of one inodeGet per file."""
+        out = []
+        for ino in inos:
+            inode = self.inode_tree.get(ino)
+            if inode is not None:
+                out.append(_inode_view(inode))
+        return out
+
+    def lookup(self, parent: int, name: str) -> Dict:
+        d = self.dentry_tree.get((parent, name))
+        if d is None:
+            raise NoSuchDentry(f"{parent}/{name}")
+        return _dentry_view(d)
+
+    def read_dir(self, parent: int) -> List[Dict]:
+        hi = (parent, "\U0010ffff")
+        return [_dentry_view(d) for _, d in self.dentry_tree.range((parent, ""), hi)]
+
+    # ---- snapshot/restore (raft log compaction, §2.1.3) --------------------------
+    def snapshot(self) -> Any:
+        return {
+            "pid": self.partition_id,
+            "vol": self.volume,
+            "start": self.start,
+            "end": self.end,
+            "cursor": self.cursor,
+            "free": list(self.free_list),
+            "inodes": [
+                (i.inode, i.type, bytes(i.link_target), i.nlink, i.flag, i.size,
+                 [e.as_tuple() for e in i.extents], i.ctime, i.mtime, i.gen)
+                for _, i in self.inode_tree.items()
+            ],
+            "dentries": [
+                (d.parent_id, d.name, d.inode, d.type)
+                for _, d in self.dentry_tree.items()
+            ],
+        }
+
+    def restore(self, snap: Any) -> None:
+        from .types import ExtentKey
+        self.partition_id = snap["pid"]
+        self.volume = snap["vol"]
+        self.start = snap["start"]
+        self.end = snap["end"]
+        self.cursor = snap["cursor"]
+        self.free_list = list(snap["free"])
+        self.inode_tree = BTree()
+        self.dentry_tree = BTree()
+        for (ino, t, lt, nlink, flag, size, exts, ct, mt, gen) in snap["inodes"]:
+            self.inode_tree.put(ino, Inode(
+                inode=ino, type=t, link_target=lt, nlink=nlink, flag=flag,
+                size=size, extents=[ExtentKey(*e) for e in exts],
+                ctime=ct, mtime=mt, gen=gen))
+        for (p, n, i, t) in snap["dentries"]:
+            self.dentry_tree.put((p, n), Dentry(p, n, i, t))
+
+
+def _inode_view(i: Inode) -> Dict:
+    return {
+        "inode": i.inode, "type": i.type, "nlink": i.nlink, "flag": i.flag,
+        "size": i.size, "extents": [e.as_tuple() for e in i.extents],
+        "ctime": i.ctime, "mtime": i.mtime, "gen": i.gen,
+        "link_target": bytes(i.link_target),
+    }
+
+
+def _dentry_view(d: Dentry) -> Dict:
+    return {"parent": d.parent_id, "name": d.name, "inode": d.inode,
+            "type": d.type}
+
+
+class MetaNode:
+    """A metadata node hosting many meta partitions (hundreds in prod)."""
+
+    def __init__(self, node_id: str, net: Network,
+                 registry: Dict[str, "MetaNode"],
+                 raft_registry: Dict[str, MultiRaftHost],
+                 mem_capacity: int = 256 * 1024 * 1024,
+                 zone: str = "set0"):
+        self.node_id = node_id
+        self.net = net
+        self.registry = registry
+        self.mem_capacity = mem_capacity
+        self.partitions: Dict[int, MetaPartitionSM] = {}
+        self.raft_members: Dict[int, Any] = {}
+        self.raft_host = MultiRaftHost(node_id, net, raft_registry)
+        self.zone = zone
+        registry[node_id] = self
+
+    # ---- partition lifecycle ---------------------------------------------------
+    def add_partition(self, partition_id: int, volume: str, start: int,
+                      end: int, replicas: List[str],
+                      max_entries: int = 1 << 20) -> MetaPartitionSM:
+        sm = MetaPartitionSM(partition_id, volume, start, end, max_entries)
+        self.partitions[partition_id] = sm
+        self.raft_members[partition_id] = self.raft_host.add_group(
+            f"mp{partition_id}", replicas, sm)
+        return sm
+
+    # ---- RPC endpoints -----------------------------------------------------------
+    # sequential raft-log append (group-committed) per metadata mutation
+    LOG_APPEND_US = 4.0
+
+    def propose(self, partition_id: int, payload: Any,
+                client_id: str = "", seq: int = -1) -> Any:
+        """Write op: goes through the partition's raft group.  Charges the
+        (batched) raft log append on every replica (§2.1.3 snapshots+logs)."""
+        member = self.raft_members[partition_id]
+        result = member.propose(payload, client_id=client_id, seq=seq)
+        op = self.net.current_op
+        for nid in member.peers:
+            self.net.charge_busy(nid, self.LOG_APPEND_US)
+        if op is not None:
+            op.add(self.LOG_APPEND_US)
+        return result
+
+    def read(self, partition_id: int, op: str, *args: Any) -> Any:
+        """Read op: served from the leader's in-memory state (sequential
+        consistency; no quorum read — the paper's relaxed semantics)."""
+        sm = self.partitions[partition_id]
+        return getattr(sm, op)(*args)
+
+    # ---- reporting -----------------------------------------------------------------
+    def mem_used(self) -> int:
+        return sum(p.mem_bytes() for p in self.partitions.values())
+
+    def utilization(self) -> float:
+        return self.mem_used() / self.mem_capacity if self.mem_capacity else 1.0
+
+    def heartbeat_payload(self) -> Dict[str, Any]:
+        return {
+            "node": self.node_id,
+            "kind": "meta",
+            "zone": self.zone,
+            "utilization": self.utilization(),
+            "partitions": {
+                pid: {
+                    "entries": p.entries,
+                    "max_entries": p.max_entries,
+                    "max_inode_id": p.max_inode_id,
+                    "end": p.end,
+                    "writable": p.writable(),
+                    "leader": self.raft_members[pid].role == "leader",
+                }
+                for pid, p in self.partitions.items()
+            },
+        }

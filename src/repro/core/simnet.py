@@ -1,0 +1,318 @@
+"""Simulated cluster substrate: virtual clock, network, disks.
+
+CFS is a multi-node system; this container is one CPU box.  The protocols
+(raft, chain replication, committed offsets, placement) run as real code —
+only the transport is simulated.  Three pieces:
+
+* ``SimClock`` — a virtual clock in microseconds.  Benchmarks advance it by
+  the modeled cost of each operation; unit tests mostly ignore it.
+* ``Network`` — routes RPCs between node ids.  Every call charges latency to
+  the *current operation context* (an ``OpTimer``), records traffic, and can
+  inject faults: dropped messages, partitions, dead nodes.  Calls are
+  synchronous Python calls (deterministic, easy to test); latency is *modeled*
+  rather than slept.
+* ``Disk`` — capacity + IO cost accounting per node.
+
+Timer-driven protocols (raft elections/heartbeats) are tick-driven, the same
+way etcd-raft is tested: the driver calls ``tick()`` explicitly.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+__all__ = [
+    "SimClock",
+    "NetError",
+    "NodeDown",
+    "Partitioned",
+    "MessageDropped",
+    "Network",
+    "Disk",
+    "OpTimer",
+    "LatencyModel",
+]
+
+
+class NetError(Exception):
+    """Base class for injected network faults."""
+
+
+class NodeDown(NetError):
+    pass
+
+
+class Partitioned(NetError):
+    pass
+
+
+class MessageDropped(NetError):
+    pass
+
+
+class DiskFull(Exception):
+    pass
+
+
+class SimClock:
+    """Virtual clock, microsecond resolution."""
+
+    def __init__(self) -> None:
+        self.now_us: float = 0.0
+
+    def advance(self, dt_us: float) -> None:
+        assert dt_us >= 0
+        self.now_us += dt_us
+
+    def now(self) -> float:
+        return self.now_us
+
+
+@dataclass
+class LatencyModel:
+    """Cost model for one network hop / one disk op (all microseconds)."""
+
+    rtt_us: float = 200.0            # per-RPC round trip (LAN ~0.2ms)
+    bw_bytes_per_us: float = 125.0   # 1000 Mbps == 125 B/us (paper's NIC)
+    disk_seek_us: float = 50.0       # SSD access latency
+    disk_bw_bytes_per_us: float = 500.0  # ~500 MB/s SSD
+
+    def net_cost(self, nbytes: int) -> float:
+        return self.rtt_us + nbytes / self.bw_bytes_per_us
+
+    def disk_cost(self, nbytes: int) -> float:
+        return self.disk_seek_us + nbytes / self.disk_bw_bytes_per_us
+
+
+class OpTimer:
+    """Accumulates the modeled latency of one logical operation.
+
+    Sequential costs add; parallel fan-out (raft leader -> followers) takes the
+    max of the branches via ``parallel()``.
+    """
+
+    def __init__(self) -> None:
+        self.us: float = 0.0
+        self.msgs: int = 0
+        self.bytes: int = 0
+        self.disk_ops: int = 0
+
+    def add(self, us: float) -> None:
+        self.us += us
+
+    def parallel(self, branch_costs: List[float]) -> None:
+        if branch_costs:
+            self.us += max(branch_costs)
+
+
+class Disk:
+    """Per-node disk: capacity accounting + IO cost model.
+
+    When ``owner``+``net`` are set, IO time also accrues to the node's busy
+    ledger (the disk is the node's own resource)."""
+
+    def __init__(self, capacity_bytes: int, model: Optional[LatencyModel] = None,
+                 owner: str = "", net: Optional["Network"] = None):
+        self.capacity = capacity_bytes
+        self.used = 0
+        self.model = model or LatencyModel()
+        self.owner = owner
+        self.net = net
+        self.reads = 0
+        self.writes = 0
+        self.read_bytes = 0
+        self.write_bytes = 0
+
+    @property
+    def free(self) -> int:
+        return self.capacity - self.used
+
+    @property
+    def utilization(self) -> float:
+        return self.used / self.capacity if self.capacity else 1.0
+
+    def alloc(self, nbytes: int) -> None:
+        if self.used + nbytes > self.capacity:
+            raise DiskFull(f"disk full: used={self.used} req={nbytes} cap={self.capacity}")
+        self.used += nbytes
+
+    def release(self, nbytes: int) -> None:
+        self.used = max(0, self.used - nbytes)
+
+    def write_cost(self, nbytes: int, op: Optional[OpTimer] = None) -> float:
+        self.writes += 1
+        self.write_bytes += nbytes
+        c = self.model.disk_cost(nbytes)
+        if op is not None:
+            op.add(c)
+            op.disk_ops += 1
+        if self.net is not None and self.owner:
+            self.net.charge_busy(self.owner, c)
+        return c
+
+    def read_cost(self, nbytes: int, op: Optional[OpTimer] = None) -> float:
+        self.reads += 1
+        self.read_bytes += nbytes
+        c = self.model.disk_cost(nbytes)
+        if op is not None:
+            op.add(c)
+            op.disk_ops += 1
+        if self.net is not None and self.owner:
+            self.net.charge_busy(self.owner, c)
+        return c
+
+
+@dataclass
+class NetStats:
+    msgs: int = 0
+    bytes: int = 0
+    # (src, dst) -> count; used to demonstrate raft-set heartbeat reduction.
+    per_pair: Dict[Tuple[str, str], int] = field(default_factory=dict)
+    per_kind: Dict[str, int] = field(default_factory=dict)
+
+    def record(self, src: str, dst: str, nbytes: int, kind: str) -> None:
+        self.msgs += 1
+        self.bytes += nbytes
+        self.per_pair[(src, dst)] = self.per_pair.get((src, dst), 0) + 1
+        self.per_kind[kind] = self.per_kind.get(kind, 0) + 1
+
+
+class Network:
+    """Synchronous RPC fabric with fault injection and cost accounting."""
+
+    def __init__(self, model: Optional[LatencyModel] = None, seed: int = 0):
+        self.model = model or LatencyModel()
+        self.stats = NetStats()
+        self.rng = random.Random(seed)
+        self.dead_nodes: Set[str] = set()
+        # partition groups: nodes can only talk within their group. None = no partition.
+        self._partition_of: Optional[Dict[str, int]] = None
+        self.drop_prob: float = 0.0
+        # per-destination extra latency (straggler injection), us
+        self.slow_nodes: Dict[str, float] = {}
+        self._op_stack: List[OpTimer] = []
+        # per-node accumulated service time (bottleneck-server model used by
+        # the benchmarks: simulated IOPS = ops / max(stream time, node busy))
+        self.busy_us: Dict[str, float] = {}
+        self.cpu_cost_us: float = 2.0      # per-RPC server-side CPU cost
+
+    def charge_busy(self, node: str, us: float) -> None:
+        self.busy_us[node] = self.busy_us.get(node, 0.0) + us
+
+    def reset_accounting(self) -> None:
+        self.busy_us.clear()
+        self.stats = NetStats()
+
+    # ---- fault injection ------------------------------------------------
+    def kill(self, node_id: str) -> None:
+        self.dead_nodes.add(node_id)
+
+    def revive(self, node_id: str) -> None:
+        self.dead_nodes.discard(node_id)
+
+    def partition(self, *groups: List[str]) -> None:
+        m: Dict[str, int] = {}
+        for gi, g in enumerate(groups):
+            for n in g:
+                m[n] = gi
+        self._partition_of = m
+
+    def heal(self) -> None:
+        self._partition_of = None
+
+    def set_straggler(self, node_id: str, extra_us: float) -> None:
+        if extra_us <= 0:
+            self.slow_nodes.pop(node_id, None)
+        else:
+            self.slow_nodes[node_id] = extra_us
+
+    # ---- op context -----------------------------------------------------
+    def begin_op(self) -> OpTimer:
+        op = OpTimer()
+        self._op_stack.append(op)
+        return op
+
+    def end_op(self) -> OpTimer:
+        return self._op_stack.pop()
+
+    @property
+    def current_op(self) -> Optional[OpTimer]:
+        return self._op_stack[-1] if self._op_stack else None
+
+    # ---- transport ------------------------------------------------------
+    def check_reachable(self, src: str, dst: str) -> None:
+        if dst in self.dead_nodes:
+            raise NodeDown(dst)
+        if src in self.dead_nodes:
+            raise NodeDown(src)
+        if self._partition_of is not None:
+            if self._partition_of.get(src, -1) != self._partition_of.get(dst, -2):
+                raise Partitioned(f"{src} !~ {dst}")
+        if self.drop_prob > 0 and self.rng.random() < self.drop_prob:
+            raise MessageDropped(f"{src} -> {dst}")
+
+    def charge(self, src: str, dst: str, nbytes: int, kind: str = "rpc") -> float:
+        """Account one message; returns its modeled latency (not yet added)."""
+        self.stats.record(src, dst, nbytes, kind)
+        lat = self.model.net_cost(nbytes)
+        lat += self.slow_nodes.get(dst, 0.0)
+        lat += self.slow_nodes.get(src, 0.0)
+        return lat
+
+    def call(
+        self,
+        src: str,
+        dst: str,
+        fn: Callable[..., Any],
+        *args: Any,
+        nbytes: int = 256,
+        reply_bytes: int = 64,
+        kind: str = "rpc",
+        **kwargs: Any,
+    ) -> Any:
+        """Synchronous RPC src -> dst.  Charges request+reply latency to the
+        current op (if any), applies fault rules, then invokes ``fn``."""
+        self.check_reachable(src, dst)
+        lat = self.charge(src, dst, nbytes, kind)
+        service = self.cpu_cost_us + nbytes / self.model.bw_bytes_per_us
+        self.charge_busy(dst, service)
+        result = fn(*args, **kwargs)
+        lat += self.charge(dst, src, reply_bytes, kind + ".reply")
+        op = self.current_op
+        if op is not None:
+            op.add(lat + service)
+            op.msgs += 2
+            op.bytes += nbytes + reply_bytes
+        return result
+
+    def parallel_calls(
+        self,
+        src: str,
+        targets: List[Tuple[str, Callable[..., Any], tuple]],
+        nbytes: int = 256,
+        reply_bytes: int = 64,
+        kind: str = "rpc",
+    ) -> List[Any]:
+        """Fan-out the same logical RPC to several nodes 'in parallel': the
+        op pays max(branch latencies).  Unreachable branches yield the
+        exception instance instead of a result."""
+        results: List[Any] = []
+        branch_costs: List[float] = []
+        op = self.current_op
+        for dst, fn, args in targets:
+            try:
+                self.check_reachable(src, dst)
+                lat = self.charge(src, dst, nbytes, kind)
+                results.append(fn(*args))
+                lat += self.charge(dst, src, reply_bytes, kind + ".reply")
+                branch_costs.append(lat)
+                if op is not None:
+                    op.msgs += 2
+                    op.bytes += nbytes + reply_bytes
+            except NetError as e:
+                results.append(e)
+        if op is not None:
+            op.parallel(branch_costs)
+        return results

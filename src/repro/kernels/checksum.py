@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: extent-integrity checksum (paper §2.2.1, C1).
+
+CFS caches a CRC per extent to verify data integrity cheaply.  CRC32's
+bit-serial polynomial division has no MXU/VPU analogue, so the TPU-native
+adaptation (documented in DESIGN.md) is a positional-weighted modular
+checksum: per VMEM tile the VPU computes Σxᵢ and Σ(i+1)·xᵢ in uint32
+(mod 2³²); tiles combine ASSOCIATIVELY (weighted_total = Σ_b weighted_b +
+offset_b · plain_b), so any tiling gives the same digest — order-sensitive
+like CRC, fully vectorized, one pass over HBM.
+
+Used device-side to fingerprint tensor shards at checkpoint save/load; the
+storage plane keeps bit-exact CRC32 (zlib) for its on-disk extents.
+
+Oracle: ``ref.checksum``."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _checksum_kernel(x_ref, out_ref, *, block: int):
+    x = x_ref[...].astype(jnp.uint32)                       # [block]
+    idx = jax.lax.broadcasted_iota(jnp.uint32, (block,), 0) + jnp.uint32(1)
+    out_ref[0, 0] = jnp.sum(x * idx, dtype=jnp.uint32)      # weighted
+    out_ref[0, 1] = jnp.sum(x, dtype=jnp.uint32)            # plain
+
+
+def checksum(data: jnp.ndarray, block: int = 4096,
+             interpret: bool = True) -> jnp.ndarray:
+    """uint32 buffer -> uint32[2] digest (weighted, plain)."""
+    data = data.astype(jnp.uint32).reshape(-1)
+    n = data.shape[0]
+    block = min(block, max(n, 1))
+    pad = (-n) % block
+    if pad:
+        data = jnp.pad(data, (0, pad))
+    nb = data.shape[0] // block
+
+    kernel = functools.partial(_checksum_kernel, block=block)
+    per_block = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, 2), jnp.uint32),
+        interpret=interpret,
+    )(data)
+    # associative combine (same formula as the ref oracle)
+    offsets = jnp.arange(nb, dtype=jnp.uint32) * jnp.uint32(block)
+    weighted = jnp.sum(per_block[:, 0] + offsets * per_block[:, 1],
+                       dtype=jnp.uint32)
+    plain = jnp.sum(per_block[:, 1], dtype=jnp.uint32)
+    return jnp.stack([weighted, plain])

@@ -1,0 +1,103 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan (zamba2's mixer).
+
+Grid (B·H, n_chunks), chunk axis sequential; [P, N] state in VMEM scratch.
+Per chunk: the quadratic dual form — C·Bᵀ Gram matrix masked by pairwise
+decay (MXU matmuls) — plus the rank-c inter-chunk state update.  Head dim P
+and chunk length are the MXU-aligned dims.
+
+Oracle: ``ref.mamba2_ssd`` (validated against the naive per-step scan)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref, *,
+                chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # [c, P]
+    dt = dt_ref[0].astype(jnp.float32)        # [c, 1] -> [c]
+    dt = dt[:, 0]
+    A = a_ref[0, 0]                           # scalar (this head's A)
+    B = b_ref[0].astype(jnp.float32)          # [c, N]
+    C = c_ref[0].astype(jnp.float32)          # [c, N]
+
+    a = A * dt                                # [c] (negative)
+    cl = jnp.cumsum(a)
+    S = s_ref[...]                            # [P, N]
+
+    # carried-state contribution: y_state[t] = e^{cl_t} * (S @ C_t)
+    y_state = jnp.exp(cl)[:, None] * jax.lax.dot_general(
+        C, S, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)   # [c, P]
+    # intra-chunk quadratic term
+    G = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [c, c]
+    diff = cl[:, None] - cl[None, :]
+    mask = (jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+            >= jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1))
+    L = jnp.exp(jnp.minimum(diff, 30.0)) * mask
+    M = G * L                                  # [c, c]
+    y = y_state + jax.lax.dot_general(
+        M * dt[None, :], x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # state update: S' = e^{cl_last} S + Σ_j e^{cl_last - cl_j} dt_j x_j B_j^T
+    cl_last = cl[-1]
+    decay_tail = jnp.exp(jnp.minimum(cl_last - cl, 30.0)) * dt   # [c]
+    s_ref[...] = (jnp.exp(cl_last) * S
+                  + jax.lax.dot_general(
+                      x * decay_tail[:, None], B, (((0,), (0,)), ((), ())),
+                      preferred_element_type=jnp.float32))
+
+
+def ssd_fwd(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray, B: jnp.ndarray,
+            C: jnp.ndarray, chunk: int = 128,
+            interpret: bool = True) -> jnp.ndarray:
+    """x [Bt,T,H,P]; dt [Bt,T,H]; A [H]; B,C [Bt,T,N] -> y [Bt,T,H,P]."""
+    bt, t, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, t)
+    pad = (-t) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    tp = t + pad
+    nt = tp // chunk
+
+    xf = x.transpose(0, 2, 1, 3).reshape(bt * h, tp, p)
+    dtf = dt.transpose(0, 2, 1).reshape(bt * h, tp, 1)
+    af = jnp.broadcast_to(A[None], (bt, h)).reshape(bt * h, 1)
+    bf = jnp.broadcast_to(B[:, None], (bt, h, tp, n)).reshape(bt * h, tp, n)
+    cf = jnp.broadcast_to(C[:, None], (bt, h, tp, n)).reshape(bt * h, tp, n)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=(bt * h, nt),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bt * h, tp, p), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, af, bf, cf)
+    return y[:, :t].reshape(bt, h, t, p).transpose(0, 2, 1, 3)

@@ -1,0 +1,279 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST be executed as a fresh process (``python -m repro.launch.dryrun``):
+the first two lines fake 512 host devices BEFORE any jax import — smoke
+tests and benchmarks elsewhere still see 1 device.
+
+Per cell this produces: compile success, memory_analysis, cost_analysis
+(FLOPs/bytes), and the per-kind collective byte counts parsed from the
+optimized (post-SPMD-partitioner) HLO — the inputs to §Roofline.
+"""
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import all_cells, get_arch, get_shape
+from ..models import get_model, input_specs, kv_dtype_for_cell
+from ..parallel import sharding as shd
+from ..train import optimizer as opt
+from ..train.train_step import make_train_step
+from .mesh import make_production_mesh
+
+RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\([^)]*\)|(?:pred|u8|s8|u16|s16|u32|s32|u64|s64|f8\w*|bf16|f16|"
+    r"f32|f64)\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(
+    r"(pred|u8|s8|u16|s16|u32|s32|u64|s64|f8e4m3fn|f8e5m2|bf16|f16|f32|f64)"
+    r"\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {"pred": 1, "u8": 1, "s8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+                "u16": 2, "s16": 2, "bf16": 2, "f16": 2,
+                "u32": 4, "s32": 4, "f32": 4, "u64": 8, "s64": 8, "f64": 8}
+
+
+def parse_collectives(hlo_text: str):
+    """Sum PER-DEVICE payload bytes of every collective, by kind.
+
+    SPMD HLO shapes are per-partition, so result-shape bytes are what one
+    device sends/receives (up to the per-kind wire factor applied in
+    roofline.py)."""
+    out = {}
+    count = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            # also catch fusion-wrapped/variadic forms conservatively
+            for kind in ("all-reduce", "all-gather", "reduce-scatter",
+                         "all-to-all", "collective-permute"):
+                if f" {kind}(" in line or f" {kind}-start(" in line:
+                    m = kind
+                    break
+            if m is None:
+                continue
+            kind = m
+        else:
+            kind = m.group(1)
+        nbytes = 0
+        # sum ALL result shapes on the line (variadic collectives return tuples)
+        lhs = line.split(" = ", 1)[0] + " = " + \
+            line.split(" = ", 1)[1].split("(", 1)[0]
+        for dt, dims in _SHAPE_RE.findall(lhs):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0) + nbytes
+        count[kind] = count.get(kind, 0) + 1
+    return out, count
+
+
+def _shardings_tree(tree_sds, shardings):
+    return jax.tree.map(lambda s: s, shardings)
+
+
+def lower_cell(arch_name: str, shape_name: str, multi_pod: bool):
+    cfg = get_arch(arch_name)
+    shape = get_shape(shape_name)
+    api = get_model(cfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    kv = kv_dtype_for_cell(cfg, shape_name)
+    from ..parallel import ctx
+    ctx.set_mesh(mesh)   # models may use shard_map paths (MoE dispatch)
+
+    params_sds = jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+    p_shard = shd.param_shardings(cfg, params_sds, mesh)
+    ins = input_specs(cfg, shape)
+    in_shard = shd.input_shardings(mesh, ins)
+
+    if shape.kind == "train":
+        oc = opt.opt_config_for(cfg)
+        opt_sds = jax.eval_shape(lambda p: opt.init_opt_state(oc, p),
+                                 params_sds)
+        o_shard = opt.OptState(
+            step=jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec()),
+            mu=shd.opt_shardings(cfg, params_sds, mesh),
+            nu=shd.opt_shardings(cfg, params_sds, mesh),
+            master=(shd.opt_shardings(cfg, params_sds, mesh)
+                    if opt_sds.master is not None else None),
+        )
+        step_fn = make_train_step(cfg, oc)
+        metric_shard = {k: jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
+            for k in ("loss", "grad_norm", "lr")}
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(p_shard, o_shard, in_shard),
+            out_shardings=(p_shard, o_shard, metric_shard),
+        )
+        with mesh:
+            lowered = jitted.lower(params_sds, opt_sds, ins)
+
+    elif shape.kind == "prefill":
+        cache_sds = api.cache_spec(shape.global_batch, shape.seq_len, kv)
+        c_shard = shd.cache_shardings(cfg, cache_sds, mesh)
+        logits_sds = jax.ShapeDtypeStruct((shape.global_batch, 1, 1), jnp.float32)
+
+        def prefill_fn(params, tokens):
+            return api.prefill(params, tokens, shape.seq_len, kv)
+
+        jitted = jax.jit(
+            prefill_fn,
+            in_shardings=(p_shard, in_shard["tokens"]),
+            out_shardings=(shd.logits_sharding(mesh, shape.global_batch), c_shard),
+        )
+        with mesh:
+            lowered = jitted.lower(params_sds, ins["tokens"])
+
+    else:  # decode
+        cache_sds = api.cache_spec(shape.global_batch, shape.seq_len, kv)
+        c_shard = shd.cache_shardings(cfg, cache_sds, mesh)
+        repl = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+
+        def decode_fn(params, token, cache, cache_len):
+            return api.decode(params, token, cache, cache_len)
+
+        jitted = jax.jit(
+            decode_fn,
+            in_shardings=(p_shard, in_shard["token"], c_shard, repl),
+            out_shardings=(shd.logits_sharding(mesh, shape.global_batch), c_shard),
+        )
+        with mesh:
+            lowered = jitted.lower(
+                params_sds, ins["token"], cache_sds,
+                jax.ShapeDtypeStruct((), jnp.int32))
+
+    return cfg, shape, mesh, lowered
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             out_dir: Path = RESULTS) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    tag = f"{arch_name}__{shape_name}__{mesh_name}"
+    out_dir.mkdir(parents=True, exist_ok=True)
+    result = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+              "ok": False}
+    t0 = time.time()
+    try:
+        cfg, shape, mesh, lowered = lower_cell(arch_name, shape_name, multi_pod)
+        result["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t1, 1)
+
+        # ---- memory analysis (proves it fits) ----
+        try:
+            ma = compiled.memory_analysis()
+            result["memory_analysis"] = {
+                k: int(getattr(ma, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes",
+                          "alias_size_in_bytes")
+                if hasattr(ma, k)
+            }
+            print(f"[{tag}] memory_analysis: {result['memory_analysis']}")
+        except Exception as e:  # CPU backend may not expose it
+            result["memory_analysis"] = f"unavailable: {e}"
+
+        # ---- cost analysis (FLOPs / bytes for §Roofline) ----
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            result["cost_analysis"] = {
+                k: float(v) for k, v in ca.items()
+                if k in ("flops", "bytes accessed", "transcendentals",
+                         "optimal_seconds")
+                or k.startswith("bytes accessed")
+            }
+            print(f"[{tag}] flops={ca.get('flops', 0):.3e}")
+        except Exception as e:
+            result["cost_analysis"] = f"unavailable: {e}"
+
+        # ---- collective bytes from optimized HLO ----
+        try:
+            hlo = compiled.as_text()
+            coll_bytes, coll_count = parse_collectives(hlo)
+            result["collective_bytes"] = coll_bytes
+            result["collective_count"] = coll_count
+            result["hlo_lines"] = hlo.count("\n")
+            # persist the HLO for the trip-weighted roofline analyzer
+            (out_dir / f"{tag}.hlo.txt").write_text(hlo)
+            # trip-weighted totals (scan bodies × trip counts)
+            from .roofline import fold_totals, roofline_terms
+            totals = fold_totals(hlo)
+            result["totals"] = {k: float(v) for k, v in totals.items()}
+            result["roofline"] = roofline_terms(totals)
+            print(f"[{tag}] roofline: {result['roofline']}")
+        except Exception as e:
+            result["collective_bytes"] = {}
+            result["collective_error"] = str(e)
+            import traceback as tb
+            result["collective_traceback"] = tb.format_exc()[-2000:]
+
+        result["ok"] = True
+        result["total_s"] = round(time.time() - t0, 1)
+        print(f"[{tag}] OK in {result['total_s']}s")
+    except Exception as e:
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+        result["total_s"] = round(time.time() - t0, 1)
+        print(f"[{tag}] FAILED: {result['error']}")
+    (out_dir / f"{tag}.json").write_text(json.dumps(result, indent=1))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "pod2x16x16" if mp else "pod16x16"
+            tag = f"{arch}__{shape}__{mesh_name}"
+            if args.skip_existing and (RESULTS / f"{tag}.json").exists():
+                prev = json.loads((RESULTS / f"{tag}.json").read_text())
+                if prev.get("ok"):
+                    print(f"[{tag}] cached OK")
+                    n_ok += 1
+                    continue
+            r = run_cell(arch, shape, mp)
+            n_ok += int(r["ok"])
+            n_fail += int(not r["ok"])
+    print(f"dry-run: {n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,416 @@
+"""Roofline analysis from compiled (post-SPMD) HLO.
+
+``compiled.cost_analysis()`` on XLA counts while-loop (lax.scan) bodies
+ONCE — useless for scan-over-layers models.  This module parses the
+optimized HLO text structurally instead:
+
+  * computations + call graph (while/call/fusion/conditional),
+  * while trip counts recovered from the loop-condition constant,
+  * per-computation dot FLOPs (2*M*N*K from shapes),
+  * per-computation memory traffic (Σ result+operand bytes of materializing
+    ops, fusion internals excluded),
+  * per-computation collective payloads, with replica-group sizes,
+
+then folds trip-weighted totals up the call graph.  All numbers are
+PER-DEVICE (SPMD HLO shapes are per-partition).
+
+Roofline terms (TPU v5e targets):
+  compute    = dot_flops / 197e12
+  memory     = traffic_bytes / 819e9
+  collective = wire_bytes / 50e9      (per-kind wire factors below)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {"pred": 1, "u8": 1, "s8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+                "u16": 2, "s16": 2, "bf16": 2, "f16": 2,
+                "u32": 4, "s32": 4, "f32": 4, "u64": 8, "s64": 8, "f64": 8,
+                "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# computation header: column-0 "%name (params) -> result {" (params may nest)
+_COMP_START = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*->.*\{\s*$")
+_COMMENT = re.compile(r"/\*.*?\*/")
+_TRIP_ATTR = re.compile(r'known_trip_count\\?":\s*\{\\?"n\\?":\s*\\?"(\d+)')
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+# HBM-traffic model with TPU fusion semantics: only MAJOR ops move data;
+# elementwise/convert/broadcast ops are assumed fused into their consumers
+# (XLA:CPU leaves them unfused — counting them would overstate a TPU's
+# traffic several-fold).  dynamic-update-slice aliases in place on TPU, so
+# only the UPDATE operand counts.
+_MAJOR_OPS = {"dot", "fusion", "reduce", "copy", "transpose", "scatter",
+              "gather", "dynamic-slice", "concatenate", "pad", "reverse",
+              "sort", "select-and-scatter", "reduce-window", "convolution",
+              "custom-call"}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_OPERAND_NAME = re.compile(r"%([\w.\-]+)")
+
+
+def _operand_bytes(line: str, defs: Dict[str, List[int]],
+                   sizes: Dict[str, int]) -> int:
+    """Sum of operand tensor sizes (looked up in the symbol table)."""
+    try:
+        args = line.split("(", 1)[1]
+        # cut at the matching close paren level-0 (approx: first '), ')
+        args = args.split(")", 1)[0]
+    except IndexError:
+        return 0
+    total = 0
+    for name in _OPERAND_NAME.findall(args):
+        total += sizes.get(name, 0)
+    return total
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _result_bytes(line: str) -> int:
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0
+    # result type(s) = everything before the op name
+    m = re.match(r"\s*(\(?[^=]*?\)?)\s+[\w\-]+\(", lhs[1])
+    return _shape_bytes(m.group(1)) if m else 0
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    traffic: float = 0.0
+    coll_payload: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_wire: float = 0.0
+    coll_count: int = 0
+    # (kind, callee(s), trips) edges
+    calls: List[Tuple[str, List[str], float]] = dataclasses.field(
+        default_factory=list)
+    fusion_callees: List[str] = dataclasses.field(default_factory=list)
+
+
+def _op_name(line: str) -> Optional[str]:
+    m = re.match(r"\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*\(?[^=]*?\)?\s*([\w\-]+)\(",
+                 line)
+    return m.group(1) if m else None
+
+
+def _dot_flops(line: str, defs: Dict[str, List[int]]) -> float:
+    """2*OUT*K: optimized HLO references operands by NAME only, so the lhs
+    shape comes from the module-wide symbol table ``defs``."""
+    res = _SHAPE_RE.findall(line.split(" = ", 1)[1].split("dot(", 1)[0])
+    if not res:
+        return 0.0
+    out_elems = 1
+    for d in res[0][1].split(","):
+        if d:
+            out_elems *= int(d)
+    args = line.split("dot(", 1)[1].split(")", 1)[0]
+    lhs_name = args.split(",")[0].strip().lstrip("%")
+    lhs_dims = defs.get(lhs_name)
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    k = 1
+    if m and lhs_dims:
+        for ci in m.group(1).split(","):
+            if ci and int(ci) < len(lhs_dims):
+                k *= lhs_dims[int(ci)]
+    return 2.0 * out_elems * k
+
+
+_DEF_RE = re.compile(r"\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+
+
+def build_defs(hlo: str):
+    """Symbol tables: name -> first result-shape dims, name -> result bytes."""
+    defs: Dict[str, List[int]] = {}
+    sizes: Dict[str, int] = {}
+    for raw in hlo.splitlines():
+        if " = " not in raw:
+            continue
+        line = _COMMENT.sub("", raw)
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        rest = m.group(2)
+        shp = _SHAPE_RE.search(rest)
+        if shp:
+            defs[m.group(1)] = [int(d) for d in shp.group(2).split(",") if d]
+        # result bytes: shapes before the op-name paren
+        head = rest.split("(", 1)[0]
+        sizes[m.group(1)] = _shape_bytes(head)
+    return defs, sizes
+
+
+def _group_size(line: str, default: int = 16) -> int:
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return default
+
+
+def _wire_bytes(kind: str, payload: float, g: int) -> float:
+    """Per-device bytes over the busiest link."""
+    if g <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * payload * (g - 1) / g
+    if kind == "all-gather":
+        return payload * (g - 1) / g       # payload = gathered result
+    if kind == "reduce-scatter":
+        return payload * (g - 1)           # payload = scattered result
+    if kind == "all-to-all":
+        return payload * (g - 1) / g
+    if kind == "collective-permute":
+        return payload
+    return payload
+
+
+def parse_hlo(hlo: str) -> Dict[str, CompStats]:
+    comps: Dict[str, CompStats] = {}
+    cur: Optional[CompStats] = None
+    cur_name = ""
+    entry = None
+    defs, sizes = build_defs(hlo)
+    lines = hlo.splitlines()
+    for raw in lines:
+        mc = _COMP_START.match(raw)
+        if mc:
+            cur_name = mc.group(2)
+            cur = comps.setdefault(cur_name, CompStats())
+            if mc.group(1):
+                entry = cur_name
+            continue
+        if cur is None or " = " not in raw:
+            continue
+        line = _COMMENT.sub("", raw)
+        op = _op_name(line)
+        if op is None:
+            continue
+        # call edges
+        if op in ("while",):
+            m = re.search(r"body=%?([\w.\-]+)", line)
+            c = re.search(r"condition=%?([\w.\-]+)", line)
+            t = _TRIP_ATTR.search(raw)
+            trips = float(t.group(1)) if t else -1.0
+            if m:
+                cur.calls.append(("while",
+                                  [m.group(1), c.group(1) if c else ""],
+                                  trips))
+            continue
+        if op in ("call", "async-start"):
+            m = re.search(r"to_apply=%?([\w.\-]+)", line)
+            if m:
+                cur.calls.append(("call", [m.group(1)], 1.0))
+            continue
+        if op == "conditional":
+            m = re.search(r"branch_computations=\{([^}]*)\}", line)
+            if m:
+                names = [x.strip().lstrip("%") for x in m.group(1).split(",")]
+                cur.calls.append(("cond", names, 1.0))
+            continue
+        if op == "fusion":
+            m = re.search(r"calls=%?([\w.\-]+)", line)
+            if m:
+                cur.fusion_callees.append(m.group(1))
+            names = _OPERAND_NAME.findall(
+                line.split("(", 1)[1].split(")", 1)[0])
+            op_sizes = sorted((sizes.get(n, 0) for n in names), reverse=True)
+            largest = op_sizes[0] if op_sizes else 0
+            rb = _result_bytes(line)
+            if "dynamic_update_slice" in raw or "dynamic-update-slice" in raw:
+                # DUS-rooted fusion: aliased in place on TPU — only the
+                # update slice (≈ second-largest operand) moves
+                upd = op_sizes[1] if len(op_sizes) > 1 else max(rb - largest, 0)
+                cur.traffic += 2 * min(upd, rb)
+                continue
+            # fused reads bounded at 2x the result: operands that are
+            # scan-stacked buffers are only SLICED inside the fusion —
+            # counting them whole would overstate traffic by the layer count
+            cur.traffic += rb + min(largest, 2 * rb)
+            continue
+        if op.endswith("-done"):
+            continue
+        # collectives (sync or -start variants)
+        base = op[:-6] if op.endswith("-start") else op
+        if base in _COLL_KINDS:
+            payload = _result_bytes(line)
+            if "_promoted" in line:
+                # XLA:CPU promotes bf16 all-reduces to f32 ("..._promoted"
+                # reducers); TPU reduces bf16 natively — halve the payload
+                payload //= 2
+            g = _group_size(line)
+            cur.coll_payload[base] = cur.coll_payload.get(base, 0) + payload
+            cur.coll_wire += _wire_bytes(base, payload, g)
+            cur.coll_count += 1
+            cur.traffic += payload
+            continue
+        res_b = _result_bytes(line)
+        if op == "dot":
+            cur.dot_flops += _dot_flops(line, defs)
+            cur.traffic += res_b + _operand_bytes(line, defs, sizes)
+            continue
+        if op == "dynamic-update-slice":
+            # in-place on TPU: only the update slice is written
+            names = _OPERAND_NAME.findall(line.split("(", 1)[1])
+            if len(names) >= 2:
+                cur.traffic += 2 * sizes.get(names[1], 0)
+            continue
+        if op in ("dynamic-slice", "gather"):
+            # reads only the sliced/gathered elements, not the whole buffer
+            cur.traffic += 2 * res_b
+            continue
+        if op == "scatter":
+            # in-place on TPU: update-sized read+write
+            names = _OPERAND_NAME.findall(line.split("(", 1)[1])
+            upd = sizes.get(names[-1], 0) if names else 0
+            cur.traffic += 2 * upd
+            continue
+        if op == "reduce":
+            cur.traffic += res_b + _operand_bytes(line, defs, sizes)
+            continue
+        if op in _MAJOR_OPS:
+            # major op: writes its result, reads >= its largest input
+            # (bounded for the sliced-stack case, as for fusions)
+            names = _OPERAND_NAME.findall(
+                line.split("(", 1)[1].split(")", 1)[0])
+            largest = max((sizes.get(n, 0) for n in names), default=0)
+            cur.traffic += res_b + min(largest, 2 * res_b)
+        # anything else: elementwise/shape op — fuses on TPU, no HBM traffic
+    comps["__entry__"] = comps.get(entry, CompStats()) if entry else CompStats()
+    comps["__entry_name__"] = entry  # type: ignore
+    return comps
+
+
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _trip_count(cond_comp_text_constants: List[int]) -> float:
+    return float(max(cond_comp_text_constants)) if cond_comp_text_constants \
+        else 1.0
+
+
+def fold_totals(hlo: str) -> Dict[str, float]:
+    """Trip-weighted totals for the entry computation."""
+    comps = parse_hlo(hlo)
+    entry = comps.pop("__entry_name__")  # type: ignore
+    comps.pop("__entry__", None)
+
+    # constants per computation (for while trip counts)
+    consts: Dict[str, List[int]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        mc = _COMP_START.match(line)
+        if mc and "{" in line:
+            cur = mc.group(1)
+            consts[cur] = []
+            continue
+        if cur is not None:
+            for c in _TRIP_RE.findall(line):
+                consts[cur].append(int(c))
+
+    # fused computations: add their dot flops to the caller (fusion internals
+    # don't hit HBM, but MXU work is real)
+    memo: Dict[str, Tuple[float, float, float, Dict[str, float]]] = {}
+
+    def fused_flops(name: str) -> float:
+        c = comps.get(name)
+        if c is None:
+            return 0.0
+        f = c.dot_flops
+        for fc in c.fusion_callees:
+            f += fused_flops(fc)
+        return f
+
+    def total(name: str, depth=0) -> Tuple[float, float, float, Dict[str, float]]:
+        if name in memo:
+            return memo[name]
+        c = comps.get(name)
+        if c is None or depth > 64:
+            return (0.0, 0.0, 0.0, {})
+        flops = c.dot_flops
+        traffic = c.traffic
+        wire = c.coll_wire
+        payload = dict(c.coll_payload)
+        for fc in c.fusion_callees:
+            flops += fused_flops(fc)
+        for kind, callees, trips in c.calls:
+            if kind == "while":
+                body, cond = callees[0], callees[1]
+                if trips <= 0:  # no known_trip_count: condition constant
+                    trips = _trip_count(consts.get(cond, []))
+                bf, bt, bw, bp = total(body, depth + 1)
+                cf, ct, cw, cp = total(cond, depth + 1)
+                flops += trips * (bf + cf)
+                traffic += trips * (bt + ct)
+                wire += trips * (bw + cw)
+                for k, v in bp.items():
+                    payload[k] = payload.get(k, 0) + trips * v
+            else:
+                for callee in callees:
+                    f2, t2, w2, p2 = total(callee, depth + 1)
+                    flops += trips * f2
+                    traffic += trips * t2
+                    wire += trips * w2
+                    for k, v in p2.items():
+                        payload[k] = payload.get(k, 0) + trips * v
+        memo[name] = (flops, traffic, wire, payload)
+        return memo[name]
+
+    flops, traffic, wire, payload = total(entry)
+    return {
+        "dot_flops": flops,
+        "traffic_bytes": traffic,
+        "wire_bytes": wire,
+        **{f"coll_{k}": v for k, v in payload.items()},
+    }
+
+
+def roofline_terms(totals: Dict[str, float]) -> Dict[str, float]:
+    compute_s = totals["dot_flops"] / PEAK_FLOPS
+    memory_s = totals["traffic_bytes"] / HBM_BW
+    coll_s = totals["wire_bytes"] / ICI_BW
+    dom = max(("compute", compute_s), ("memory", memory_s),
+              ("collective", coll_s), key=lambda kv: kv[1])
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dom[0],
+        "bound_s": dom[1],
+    }
+
+
+def model_flops_per_device(cfg, shape, n_devices: int = 256) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE), per device."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens / n_devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens / n_devices
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch / n_devices

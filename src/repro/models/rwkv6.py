@@ -1,0 +1,188 @@
+"""RWKV6 "Finch" — attention-free RNN LM (rwkv6-1.6b).
+
+The v6 signature features are reproduced: data-dependent token-shift
+(ddlerp with a shared low-rank projection) and data-dependent per-channel
+decay w_t = exp(-exp(w0 + lora(x_t))).  The WKV recurrence runs through the
+chunked formulation in ``kernels.ref`` (the Pallas kernel's oracle).
+
+State per layer = (tmix shift [B,d], cmix shift [B,d], wkv state [B,H,K,V]);
+decode is O(1) in sequence length — this arch runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ArchConfig
+from ..kernels import ref
+from . import layers
+from .layers import Params, _dense_init
+
+MAA_RANK = 32     # token-shift lora rank
+DECAY_RANK = 64   # decay lora rank
+
+
+def init_layer(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    hd = cfg.ssm_head_dim
+    H = d // hd
+    ks = jax.random.split(key, 12)
+    u = (jax.random.normal(ks[0], (H, hd), jnp.float32) * 0.3).astype(jnp.float32)
+    return {
+        "ln1": jnp.ones((d,), dtype),
+        "tmix": {
+            "maa_x": jnp.zeros((d,), dtype),
+            "maa_rkvwg": jnp.zeros((5, d), dtype),
+            "maa_w1": _dense_init(ks[1], d, 5 * MAA_RANK, dtype),
+            "maa_w2": (jax.random.normal(ks[2], (5, MAA_RANK, d), jnp.float32)
+                       * 0.02).astype(dtype),
+            "decay": jnp.full((d,), -4.0, jnp.float32),   # w0
+            "decay_w1": _dense_init(ks[3], d, DECAY_RANK, dtype),
+            "decay_w2": _dense_init(ks[4], DECAY_RANK, d, dtype),
+            "u": u,                                        # "time_faaaa" bonus
+            "wr": _dense_init(ks[5], d, d, dtype),
+            "wk": _dense_init(ks[6], d, d, dtype),
+            "wv": _dense_init(ks[7], d, d, dtype),
+            "wg": _dense_init(ks[8], d, d, dtype),
+            "wo": _dense_init(ks[9], d, d, dtype),
+            "ln_x": jnp.ones((d,), dtype),
+        },
+        "ln2": jnp.ones((d,), dtype),
+        "cmix": {
+            "maa_k": jnp.zeros((d,), dtype),
+            "maa_r": jnp.zeros((d,), dtype),
+            "wk": _dense_init(ks[10], d, f, dtype),
+            "wv": _dense_init(ks[11], f, d, dtype),
+            "wr": _dense_init(jax.random.fold_in(key, 99), d, d, dtype),
+        },
+    }
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Params:
+    k_emb, k_layers = jax.random.split(key)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(cfg, k, dtype))(layer_keys)
+    return {"emb": layers.init_embeddings(cfg, k_emb, dtype),
+            "layers": stacked}
+
+
+# ------------------------------------------------------------------ pieces
+
+def _shift(x: jnp.ndarray, prev: jnp.ndarray) -> jnp.ndarray:
+    """Token shift: x_{t-1} with ``prev`` filling t=0.  x [B,T,d], prev [B,d]."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _tmix_inputs(p: Params, x: jnp.ndarray, x_prev: jnp.ndarray):
+    """Data-dependent lerp (ddlerp) producing the 5 mixed inputs r,k,v,w,g."""
+    sx = _shift(x, x_prev) - x
+    xxx = x + sx * p["maa_x"]
+    m = jnp.tanh(jnp.einsum("btd,dr->btr", xxx, p["maa_w1"]))
+    m = m.reshape(*m.shape[:2], 5, MAA_RANK)
+    mm = jnp.einsum("btfr,frd->fbtd", m, p["maa_w2"])
+    mixed = [x + sx * (p["maa_rkvwg"][i] + mm[i]) for i in range(5)]
+    return mixed  # xr, xk, xv, xw, xg
+
+
+def tmix(cfg: ArchConfig, p: Params, x: jnp.ndarray, x_prev: jnp.ndarray,
+         wkv_state: jnp.ndarray, chunk: int = 64):
+    d = cfg.d_model
+    hd = cfg.ssm_head_dim
+    H = d // hd
+    b, t, _ = x.shape
+    xr, xk, xv, xw, xg = _tmix_inputs(p, x, x_prev)
+    r = jnp.einsum("btd,de->bte", xr, p["wr"]).reshape(b, t, H, hd)
+    k = jnp.einsum("btd,de->bte", xk, p["wk"]).reshape(b, t, H, hd)
+    v = jnp.einsum("btd,de->bte", xv, p["wv"]).reshape(b, t, H, hd)
+    g = jax.nn.silu(jnp.einsum("btd,de->bte", xg, p["wg"]))
+    ww = (p["decay"]
+          + jnp.einsum("btr,rd->btd",
+                       jnp.tanh(jnp.einsum("btd,dr->btr", xw, p["decay_w1"])),
+                       p["decay_w2"]).astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(ww)).reshape(b, t, H, hd)
+    wkv_fn = ref.rwkv6_naive if t == 1 else ref.rwkv6_chunked
+    kwargs = {} if t == 1 else {"chunk": chunk}
+    y, new_state = wkv_fn(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        w, p["u"], wkv_state, **kwargs)
+    y = y.reshape(b, t, d)
+    y = layers.rms_norm(y.astype(x.dtype), p["ln_x"]) * g
+    out = jnp.einsum("btd,de->bte", y, p["wo"])
+    return out, x[:, -1, :], new_state
+
+
+def cmix(p: Params, x: jnp.ndarray, x_prev: jnp.ndarray):
+    sx = _shift(x, x_prev) - x
+    xk = x + sx * p["maa_k"]
+    xr = x + sx * p["maa_r"]
+    k = jnp.square(jax.nn.relu(jnp.einsum("btd,df->btf", xk, p["wk"])))
+    out = jax.nn.sigmoid(jnp.einsum("btd,de->bte", xr, p["wr"])) * \
+        jnp.einsum("btf,fd->btd", k, p["wv"])
+    return out, x[:, -1, :]
+
+
+# ------------------------------------------------------------------ model
+
+def state_spec(cfg: ArchConfig, batch: int):
+    d = cfg.d_model
+    hd = cfg.ssm_head_dim
+    H = d // hd
+    L = cfg.n_layers
+    return {
+        "tmix_x": ((L, batch, d), jnp.bfloat16),
+        "cmix_x": ((L, batch, d), jnp.bfloat16),
+        "wkv": ((L, batch, H, hd, hd), jnp.float32),
+    }
+
+
+def zero_state(cfg: ArchConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    return {k: jnp.zeros(shape, dt)
+            for k, (shape, dt) in state_spec(cfg, batch).items()}
+
+
+def forward(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
+            state: Dict[str, jnp.ndarray] = None, remat: bool = True):
+    """tokens [B,T] -> (logits, new_state)."""
+    b, t = tokens.shape
+    if state is None:
+        state = zero_state(cfg, b)
+    h = layers.embed(params["emb"], tokens)
+
+    def block(h, xs):
+        lp, tx, cx, wkv = xs
+        att, tx2, wkv2 = tmix(cfg, lp["tmix"],
+                              layers.rms_norm(h, lp["ln1"]), tx, wkv)
+        h = h + att
+        ffn, cx2 = cmix(lp["cmix"], layers.rms_norm(h, lp["ln2"]), cx)
+        h = h + ffn
+        return h, (tx2, cx2, wkv2)
+
+    block_fn = jax.checkpoint(block) if remat else block
+    h, (tx, cx, wkv) = lax.scan(
+        block_fn, h,
+        (params["layers"], state["tmix_x"].astype(h.dtype),
+         state["cmix_x"].astype(h.dtype), state["wkv"]))
+    logits = layers.unembed(params["emb"], h)
+    return logits, {"tmix_x": tx, "cmix_x": cx, "wkv": wkv}
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch) -> jnp.ndarray:
+    logits, _ = forward(cfg, params, batch["tokens"])
+    return layers.cross_entropy(logits, batch["labels"], cfg.vocab)
+
+
+def prefill(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
+            smax: int = 0, kv_dtype_name: str = "bfloat16", remat: bool = True):
+    logits, state = forward(cfg, params, tokens, remat=remat)
+    return logits[:, -1:], state
+
+
+def decode_step(cfg: ArchConfig, params: Params, token: jnp.ndarray,
+                state: Dict[str, jnp.ndarray], cache_len=None):
+    """Single-token step (T=1 path through the same chunked kernel)."""
+    logits, new_state = forward(cfg, params, token, state, remat=False)
+    return logits, new_state

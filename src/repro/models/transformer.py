@@ -1,0 +1,201 @@
+"""Decoder-only LM (dense + MoE variants) with scan-over-layers + remat.
+
+Covers: codeqwen1.5-7b, phi3-medium-14b, minicpm-2b, qwen1.5-32b,
+musicgen-large (audio backbone), chameleon-34b (vlm backbone),
+mixtral-8x22b and arctic-480b (MoE block via models.moe).
+
+Layer parameters are stacked on a leading [L] axis and consumed by
+``lax.scan`` with ``jax.checkpoint`` — HLO stays one-layer-sized and
+activation memory stays O(1) in depth.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ArchConfig
+from ..kernels import ref
+from . import layers
+from .layers import Params
+from .moe import init_moe_block, moe_block
+
+
+def _residual_scale(cfg: ArchConfig) -> float:
+    # minicpm: depth-scaled residual branch (scale_depth / sqrt(L))
+    return 1.4 / (cfg.n_layers ** 0.5) if cfg.depth_scaled_residual else 1.0
+
+
+# ------------------------------------------------------------------ init
+
+def init_layer(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Params:
+    if cfg.family == "moe":
+        k1, k2 = jax.random.split(key)
+        p = {
+            "ln1": jnp.ones((cfg.d_model,), dtype),
+            "attn": layers.init_attention(cfg, k1, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype),
+            "moe": init_moe_block(cfg, k2, dtype),
+        }
+        if cfg.dense_residual:
+            p["mlp"] = layers.init_mlp(cfg.d_model, cfg.d_ff,
+                                       jax.random.fold_in(k2, 7), dtype)
+        return p
+    return layers.init_block(cfg, key, dtype)
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Params:
+    k_emb, k_layers = jax.random.split(key)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(cfg, k, dtype))(layer_keys)
+    return {"emb": layers.init_embeddings(cfg, k_emb, dtype),
+            "layers": stacked}
+
+
+# ------------------------------------------------------------------ forward
+
+def _mix(cfg: ArchConfig, lp: Params, h: jnp.ndarray) -> jnp.ndarray:
+    """The FFN/MoE half of a block."""
+    hin = layers.rms_norm(h, lp["ln2"])
+    if cfg.family == "moe":
+        # the dense-residual branch (arctic) is fused into the MoE combine
+        # psum when the shard_map path is active
+        return moe_block(cfg, lp["moe"], hin,
+                         mlp=lp.get("mlp") if cfg.dense_residual else None)
+    return layers.swiglu(lp["mlp"], hin)
+
+
+def _attn_full(cfg: ArchConfig, lp: Params, h: jnp.ndarray,
+               positions: jnp.ndarray) -> jnp.ndarray:
+    q, k, v = layers._qkv(cfg, lp["attn"], layers.rms_norm(h, lp["ln1"]),
+                          positions, pad_tp=True)
+    hp, kvh = q.shape[2], k.shape[2]
+    g = hp // kvh
+    out = ref.flash_attention(q.reshape(*q.shape[:2], kvh, g, cfg.hd),
+                              k, v, window=cfg.swa_window)
+    out = out.reshape(*out.shape[:2], hp * cfg.hd)
+    wo = lp["attn"]["wo"]
+    if hp != cfg.n_heads:   # zero rows for the phantom heads (exact)
+        wo = jnp.pad(wo, ((0, (hp - cfg.n_heads) * cfg.hd), (0, 0)))
+    return jnp.einsum("bth,hd->btd", out, wo)
+
+
+def forward(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
+            remat: bool = True) -> jnp.ndarray:
+    """tokens [B, T] -> logits [B, T, V]."""
+    b, t = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    h = layers.embed(params["emb"], tokens)
+    rs = _residual_scale(cfg)
+
+    def block(h, lp):
+        h = h + rs * _attn_full(cfg, lp, h, positions)
+        h = h + rs * _mix(cfg, lp, h)
+        return h, None
+
+    block_fn = jax.checkpoint(block) if remat else block
+    h, _ = lax.scan(block_fn, h, params["layers"])
+    return layers.unembed(params["emb"], h)
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: Dict[str, jnp.ndarray]
+            ) -> jnp.ndarray:
+    logits = forward(cfg, params, batch["tokens"])
+    return layers.cross_entropy(logits, batch["labels"], cfg.vocab)
+
+
+# ------------------------------------------------------------------ serving
+
+def kv_cache_spec(cfg: ArchConfig, batch: int, smax: int, dtype_name: str):
+    """Shapes of the per-layer-stacked KV cache."""
+    kvh, hd, L = cfg.n_kv_heads, cfg.hd, cfg.n_layers
+    if cfg.swa_window:
+        smax = min(smax, cfg.swa_window)    # SWA: ring buffer of window size
+    if dtype_name == "int8":
+        return {
+            "k": ((L, batch, smax, kvh, hd), jnp.int8),
+            "v": ((L, batch, smax, kvh, hd), jnp.int8),
+            "k_scale": ((L, batch, smax, kvh, 1), jnp.bfloat16),
+            "v_scale": ((L, batch, smax, kvh, 1), jnp.bfloat16),
+        }
+    return {
+        "k": ((L, batch, smax, kvh, hd), jnp.bfloat16),
+        "v": ((L, batch, smax, kvh, hd), jnp.bfloat16),
+    }
+
+
+def prefill(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
+            smax: int, kv_dtype_name: str = "bfloat16", remat: bool = True):
+    """Process the full prompt; return (last-token logits, cache dict)."""
+    b, t = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    h = layers.embed(params["emb"], tokens)
+    rs = _residual_scale(cfg)
+    kv_dtype = jnp.int8 if kv_dtype_name == "int8" else jnp.bfloat16
+    cache_smax = min(smax, cfg.swa_window) if cfg.swa_window else smax
+
+    def block(h, lp):
+        hin = layers.rms_norm(h, lp["ln1"])
+        q, k, v = layers._qkv(cfg, lp["attn"], hin, positions)
+        kvh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+        out = ref.flash_attention(q.reshape(*q.shape[:2], kvh, g, cfg.hd),
+                                  k, v, window=cfg.swa_window)
+        out = out.reshape(b, t, cfg.n_heads * cfg.hd)
+        h = h + rs * jnp.einsum("bth,hd->btd", out, lp["attn"]["wo"])
+        h = h + rs * _mix(cfg, lp, h)
+        # cache tail: last cache_smax positions (= all for full attention)
+        k_tail = k[:, -cache_smax:] if cfg.swa_window else k
+        v_tail = v[:, -cache_smax:] if cfg.swa_window else v
+        pad = cache_smax - k_tail.shape[1]
+        k_tail = jnp.pad(k_tail, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_tail = jnp.pad(v_tail, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_dtype == jnp.int8:
+            kq, ks = layers._quantize_kv(k_tail)
+            vq, vs = layers._quantize_kv(v_tail)
+            return h, {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        return h, {"k": k_tail.astype(kv_dtype), "v": v_tail.astype(kv_dtype)}
+
+    block_fn = jax.checkpoint(block) if remat else block
+    h, cache = lax.scan(block_fn, h, params["layers"])
+    logits = layers.unembed(params["emb"], h[:, -1:])
+    return logits, cache
+
+
+def decode_step(cfg: ArchConfig, params: Params, token: jnp.ndarray,
+                cache: Dict[str, jnp.ndarray], cache_len: jnp.ndarray):
+    """One decode step.  token [B,1]; cache from ``prefill``/``kv_cache_spec``;
+    cache_len: scalar int32.  Returns (logits [B,1,V], new cache)."""
+    b = token.shape[0]
+    h = layers.embed(params["emb"], token)
+    rs = _residual_scale(cfg)
+    int8 = "k_scale" in cache
+    smax = cache["k"].shape[2]
+    if cfg.swa_window:
+        write_pos = cache_len % smax        # ring buffer wraps the window
+    else:
+        write_pos = cache_len
+    n_valid = jnp.minimum(cache_len + 1, smax)
+
+    def block(h, xs):
+        lp = xs["layer"]
+        scales = (xs["k_scale"], xs["v_scale"]) if int8 else None
+        out, ck, cv, sc = layers.attention_decode(
+            cfg, lp["attn"], layers.rms_norm(h, lp["ln1"]),
+            xs["k"], xs["v"], write_pos, cache_len, n_valid, kv_scale=scales)
+        h = h + rs * out
+        h = h + rs * _mix(cfg, lp, h)
+        new = {"k": ck, "v": cv}
+        if int8:
+            new["k_scale"], new["v_scale"] = sc
+        return h, new
+
+    xs = {"layer": params["layers"], "k": cache["k"], "v": cache["v"]}
+    if int8:
+        xs["k_scale"], xs["v_scale"] = cache["k_scale"], cache["v_scale"]
+    h, new_cache = lax.scan(block, h, xs)
+    logits = layers.unembed(params["emb"], h)
+    return logits, new_cache

@@ -1,0 +1,295 @@
+"""zamba2-7b — Mamba2 backbone + ONE shared attention/MLP block.
+
+81 Mamba2 mixer layers; after every ``attn_every`` (6) of them the SHARED
+transformer block (one set of weights, 13 call sites) runs — the zamba2
+design point: attention quality at a fraction of the parameter cost.
+
+Mamba2 layer (SSD): in_proj -> [z | x | B | C | dt], short causal conv over
+(x,B,C), SSD state-space scan (chunked dual form from ``kernels.ref``),
+gated RMSNorm, out_proj.
+
+State: per-mamba-layer conv tail [B, conv_dim, 3] + SSD state [B,H,P,N];
+per-call-site KV cache for the shared block.  Decode is O(window=1) —
+this arch runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ArchConfig
+from ..kernels import ref
+from . import layers
+from .layers import Params, _dense_init
+
+CONV_K = 4  # mamba short-conv width
+
+
+def _din(cfg: ArchConfig) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def init_mamba_layer(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Params:
+    d = cfg.d_model
+    din = _din(cfg)
+    N = cfg.ssm_state
+    H = din // cfg.ssm_head_dim
+    ks = jax.random.split(key, 8)
+    # projections kept SEPARATE (z | x | B | C | dt) so tensor-parallel shard
+    # boundaries align with the logical splits (no resharding at jnp.split)
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "in_z": _dense_init(ks[0], d, din, dtype),
+        "in_x": _dense_init(ks[1], d, din, dtype),
+        "in_B": _dense_init(ks[2], d, N, dtype),
+        "in_C": _dense_init(ks[3], d, N, dtype),
+        "in_dt": _dense_init(ks[4], d, H, dtype),
+        "conv_w": (jax.random.normal(ks[5], (CONV_K, din), jnp.float32)
+                   * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((din,), dtype),
+        "conv_Bw": (jax.random.normal(ks[6], (CONV_K, N), jnp.float32)
+                    * 0.2).astype(dtype),
+        "conv_Cw": (jax.random.normal(ks[7], (CONV_K, N), jnp.float32)
+                    * 0.2).astype(dtype),
+        "A_log": jnp.zeros((H,), jnp.float32),            # A = -exp(A_log)
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "norm": jnp.ones((din,), dtype),
+        "out_proj": _dense_init(jax.random.fold_in(key, 17), din, d, dtype),
+    }
+
+
+def init_params(cfg: ArchConfig, key, dtype=jnp.bfloat16) -> Params:
+    k_emb, k_m, k_a = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_m, cfg.n_layers)
+    mamba = jax.vmap(lambda k: init_mamba_layer(cfg, k, dtype))(layer_keys)
+    return {
+        "emb": layers.init_embeddings(cfg, k_emb, dtype),
+        "mamba": mamba,
+        "shared": layers.init_block(cfg, k_a, dtype),     # THE shared block
+    }
+
+
+# ------------------------------------------------------------------ mamba2
+
+def mamba_layer(cfg: ArchConfig, p: Params, h: jnp.ndarray,
+                conv_state: jnp.ndarray, ssd_state: jnp.ndarray):
+    """h [B,T,d]; conv_state [B, din+2N, K-1]; ssd_state [B,H,P,N]."""
+    b, t, d = h.shape
+    din = _din(cfg)
+    N = cfg.ssm_state
+    P = cfg.ssm_head_dim
+    H = din // P
+    x_in = layers.rms_norm(h, p["ln"])
+    z = jnp.einsum("btd,de->bte", x_in, p["in_z"])
+    x_r = jnp.einsum("btd,de->bte", x_in, p["in_x"])
+    B_r = jnp.einsum("btd,dn->btn", x_in, p["in_B"])
+    C_r = jnp.einsum("btd,dn->btn", x_in, p["in_C"])
+    dt = jnp.einsum("btd,dh->bth", x_in, p["in_dt"])
+
+    # short causal convs on x / B / C, carrying the K-1 tail as state
+    xbc = jnp.concatenate([x_r, B_r, C_r], axis=-1)
+    prev = jnp.swapaxes(conv_state, 1, 2)                 # [B, K-1, C]
+    xbc_pad = jnp.concatenate([prev.astype(xbc.dtype), xbc], axis=1)
+    new_conv_state = jnp.swapaxes(xbc_pad[:, -(CONV_K - 1):], 1, 2)
+    w_cat = jnp.concatenate([p["conv_w"], p["conv_Bw"], p["conv_Cw"]], axis=1)
+    b_cat = jnp.concatenate(
+        [p["conv_b"], jnp.zeros((2 * N,), p["conv_b"].dtype)])
+    conv = sum(xbc_pad[:, i : i + t] * w_cat[i]
+               for i in range(CONV_K)) + b_cat
+    conv = jax.nn.silu(conv)
+    x, B, C = jnp.split(conv, [din, din + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B,T,H]
+    A = -jnp.exp(p["A_log"])
+    xh = x.reshape(b, t, H, P)
+    if t == 1:
+        y, new_ssd = ref.mamba2_naive(xh.astype(jnp.float32), dt, A,
+                                      B.astype(jnp.float32),
+                                      C.astype(jnp.float32), ssd_state)
+    else:
+        y, new_ssd = ref.mamba2_ssd(xh.astype(jnp.float32), dt, A,
+                                    B.astype(jnp.float32),
+                                    C.astype(jnp.float32), ssd_state,
+                                    chunk=128)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, t, din).astype(h.dtype)
+    y = layers.rms_norm(y, p["norm"]) * jax.nn.silu(z)
+    out = jnp.einsum("bte,ed->btd", y, p["out_proj"])
+    return out, new_conv_state, new_ssd
+
+
+def conv_state_spec(cfg: ArchConfig, batch: int):
+    din = _din(cfg)
+    return (cfg.n_layers, batch, din + 2 * cfg.ssm_state, CONV_K - 1)
+
+
+def ssd_state_spec(cfg: ArchConfig, batch: int):
+    din = _din(cfg)
+    H = din // cfg.ssm_head_dim
+    return (cfg.n_layers, batch, H, cfg.ssm_head_dim, cfg.ssm_state)
+
+
+def n_attn_sites(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def state_spec(cfg: ArchConfig, batch: int, smax: int, kv_dtype_name: str):
+    sites = n_attn_sites(cfg)
+    kvh, hd = cfg.n_kv_heads, cfg.hd
+    spec = {
+        "conv": (conv_state_spec(cfg, batch), jnp.bfloat16),
+        "ssd": (ssd_state_spec(cfg, batch), jnp.float32),
+        "k": ((sites, batch, smax, kvh, hd), jnp.bfloat16),
+        "v": ((sites, batch, smax, kvh, hd), jnp.bfloat16),
+    }
+    return spec
+
+
+def zero_state(cfg: ArchConfig, batch: int, smax: int,
+               kv_dtype_name: str = "bfloat16"):
+    return {k: jnp.zeros(s, dt)
+            for k, (s, dt) in state_spec(cfg, batch, smax, kv_dtype_name).items()}
+
+
+# ------------------------------------------------------------------ assembly
+
+def _slice_layers(params: Params, lo: int, hi: int) -> Params:
+    return jax.tree.map(lambda a: a[lo:hi], params)
+
+
+def forward(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
+            state=None, remat: bool = True, smax: int = 0):
+    """Training/prefill forward.  Returns (logits, new_state)."""
+    b, t = tokens.shape
+    period = cfg.attn_every
+    sites = n_attn_sites(cfg)
+    tail = cfg.n_layers - sites * period
+    if state is None:
+        state = zero_state(cfg, b, max(t, 1))
+    positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None], (b, t))
+    h = layers.embed(params["emb"], tokens)
+    kvh, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+
+    def mamba_block(h, xs):
+        lp, cs, ss = xs
+        out, cs2, ss2 = mamba_layer(cfg, lp, h, cs, ss)
+        return h + out, (cs2, ss2)
+
+    mamba_fn = jax.checkpoint(mamba_block) if remat else mamba_block
+
+    def shared_block(h):
+        sp = params["shared"]
+        hin = layers.rms_norm(h, sp["ln1"])
+        q, k, v = layers._qkv(cfg, sp["attn"], hin, positions)
+        out = ref.flash_attention(
+            q.reshape(b, t, kvh, g, cfg.hd), k, v)
+        out = out.reshape(b, t, cfg.n_heads * cfg.hd)
+        h = h + jnp.einsum("bth,hd->btd", out, sp["attn"]["wo"])
+        h = h + layers.swiglu(sp["mlp"], layers.rms_norm(h, sp["ln2"]))
+        return h, (k, v)
+
+    shared_fn = jax.checkpoint(shared_block) if remat else shared_block
+
+    # scan over the `sites` segments of (period mamba layers + shared block)
+    seg_params = jax.tree.map(
+        lambda a: a[: sites * period].reshape(sites, period, *a.shape[1:]),
+        params["mamba"])
+    seg_conv = state["conv"][: sites * period].reshape(
+        sites, period, *state["conv"].shape[1:])
+    seg_ssd = state["ssd"][: sites * period].reshape(
+        sites, period, *state["ssd"].shape[1:])
+
+    def segment(h, xs):
+        lp, cs, ss = xs
+        h, (cs2, ss2) = lax.scan(mamba_fn, h, (lp, cs, ss))
+        h, (k, v) = shared_fn(h)
+        return h, (cs2, ss2, k, v)
+
+    h, (conv_out, ssd_out, ks, vs) = lax.scan(
+        segment, h, (seg_params, seg_conv, seg_ssd))
+    new_conv = conv_out.reshape(sites * period, *state["conv"].shape[1:])
+    new_ssd = ssd_out.reshape(sites * period, *state["ssd"].shape[1:])
+    if tail:
+        tail_params = _slice_layers(params["mamba"], sites * period,
+                                    cfg.n_layers)
+        h, (cs_t, ss_t) = lax.scan(
+            mamba_fn, h,
+            (tail_params, state["conv"][sites * period :],
+             state["ssd"][sites * period :]))
+        new_conv = jnp.concatenate([new_conv, cs_t], axis=0)
+        new_ssd = jnp.concatenate([new_ssd, ss_t], axis=0)
+    logits = layers.unembed(params["emb"], h)
+    new_state = {"conv": new_conv, "ssd": new_ssd, "k": ks, "v": vs}
+    return logits, new_state
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch) -> jnp.ndarray:
+    logits, _ = forward(cfg, params, batch["tokens"])
+    return layers.cross_entropy(logits, batch["labels"], cfg.vocab)
+
+
+def prefill(cfg: ArchConfig, params: Params, tokens: jnp.ndarray,
+            smax: int, kv_dtype_name: str = "bfloat16", remat: bool = True):
+    b, t = tokens.shape
+    logits, state = forward(cfg, params, tokens, remat=remat)
+    # pad the per-site KV to smax so decode can append
+    pad = smax - t
+    state["k"] = jnp.pad(state["k"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    state["v"] = jnp.pad(state["v"], ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return logits[:, -1:], state
+
+
+def decode_step(cfg: ArchConfig, params: Params, token: jnp.ndarray,
+                state, cache_len):
+    """One token through 81 mamba steps + 13 shared-attn decode sites."""
+    b = token.shape[0]
+    period = cfg.attn_every
+    sites = n_attn_sites(cfg)
+    tail = cfg.n_layers - sites * period
+    h = layers.embed(params["emb"], token)
+    n_valid = cache_len + 1
+
+    def mamba_block(h, xs):
+        lp, cs, ss = xs
+        out, cs2, ss2 = mamba_layer(cfg, lp, h, cs, ss)
+        return h + out, (cs2, ss2)
+
+    seg_params = jax.tree.map(
+        lambda a: a[: sites * period].reshape(sites, period, *a.shape[1:]),
+        params["mamba"])
+    seg_conv = state["conv"][: sites * period].reshape(
+        sites, period, *state["conv"].shape[1:])
+    seg_ssd = state["ssd"][: sites * period].reshape(
+        sites, period, *state["ssd"].shape[1:])
+
+    def segment(h, xs):
+        lp, cs, ss, ck, cv = xs
+        h, (cs2, ss2) = lax.scan(mamba_block, h, (lp, cs, ss))
+        sp = params["shared"]
+        out, ck2, cv2, _ = layers.attention_decode(
+            cfg, sp["attn"], layers.rms_norm(h, sp["ln1"]),
+            ck, cv, cache_len, cache_len, n_valid)
+        h = h + out
+        h = h + layers.swiglu(sp["mlp"], layers.rms_norm(h, sp["ln2"]))
+        return h, (cs2, ss2, ck2, cv2)
+
+    h, (conv_out, ssd_out, ks, vs) = lax.scan(
+        segment, h, (seg_params, seg_conv, seg_ssd, state["k"], state["v"]))
+    new_conv = conv_out.reshape(sites * period, *state["conv"].shape[1:])
+    new_ssd = ssd_out.reshape(sites * period, *state["ssd"].shape[1:])
+    if tail:
+        tail_params = _slice_layers(params["mamba"], sites * period,
+                                    cfg.n_layers)
+        h, (cs_t, ss_t) = lax.scan(
+            mamba_block, h,
+            (tail_params, state["conv"][sites * period :],
+             state["ssd"][sites * period :]))
+        new_conv = jnp.concatenate([new_conv, cs_t], axis=0)
+        new_ssd = jnp.concatenate([new_ssd, ss_t], axis=0)
+    logits = layers.unembed(params["emb"], h)
+    return logits, {"conv": new_conv, "ssd": new_ssd, "k": ks, "v": vs}

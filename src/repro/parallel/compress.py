@@ -1,0 +1,69 @@
+"""Gradient compression for the data-parallel all-reduce (beyond-paper).
+
+int8 block-quantized gradients with ERROR FEEDBACK: each step all-reduces
+~4x fewer bytes over the slow inter-pod links; the quantization residual is
+carried into the next step's gradient, so convergence is preserved (the
+EF-SGD argument).  Off by default; enabled per-arch when the collective
+roofline term dominates and the pod axis is the bottleneck link.
+
+Pure-jax: the quantize/dequantize pair wraps any pytree of gradients; under
+pjit the all-reduce then moves int8 + one fp32 scale per block.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x: jnp.ndarray) -> Tuple[jnp.ndarray, int]:
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    return jnp.pad(flat, (0, pad)), pad
+
+
+def quantize(g: jnp.ndarray, key: jax.Array) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (int8 values [N], fp32 scales [N/BLOCK]); stochastic rounding."""
+    flat, _ = _pad_to_block(g.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    scaled = blocks / scale
+    noise = jax.random.uniform(key, scaled.shape) - 0.5
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale[:, 0]
+
+
+def dequantize(q: jnp.ndarray, scale: jnp.ndarray, shape, dtype) -> jnp.ndarray:
+    blocks = q.reshape(-1, BLOCK).astype(jnp.float32) * scale[:, None]
+    n = 1
+    for d in shape:
+        n *= d
+    return blocks.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def compress_tree(grads: Any, residual: Any, key: jax.Array
+                  ) -> Tuple[Any, Any]:
+    """Apply EF-quantization leaf-wise: returns (dequantized grads to feed
+    the optimizer — i.e. what the OTHER ranks would also see after the int8
+    all-reduce — and the new residual tree)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    res_leaves = treedef.flatten_up_to(residual) if residual is not None \
+        else [jnp.zeros_like(l, jnp.float32) for l in leaves]
+    out, new_res = [], []
+    for i, (g, r) in enumerate(zip(leaves, res_leaves)):
+        k = jax.random.fold_in(key, i)
+        corrected = g.astype(jnp.float32) + r
+        q, scale = quantize(corrected, k)
+        deq = dequantize(q, scale, g.shape, jnp.float32)
+        out.append(deq.astype(g.dtype))
+        new_res.append(corrected - deq)
+    return (jax.tree_util.tree_unflatten(treedef, out),
+            jax.tree_util.tree_unflatten(treedef, new_res))
+
+
+def zero_residual(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)

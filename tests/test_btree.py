@@ -1,0 +1,69 @@
+import random
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.btree import BTree
+
+
+def test_basic_put_get_delete():
+    t = BTree()
+    for i in range(1000):
+        t.put(i, i * 10)
+    assert len(t) == 1000
+    assert t.get(500) == 5000
+    assert t.get(1001) is None
+    assert t.delete(500)
+    assert not t.delete(500)
+    assert t.get(500) is None
+    assert len(t) == 999
+
+
+def test_overwrite_does_not_grow():
+    t = BTree()
+    t.put("a", 1)
+    t.put("a", 2)
+    assert len(t) == 1
+    assert t.get("a") == 2
+
+
+def test_range_scan_tuple_keys():
+    t = BTree()
+    for parent in (1, 2, 3):
+        for name in ("a", "b", "c", "d"):
+            t.put((parent, name), f"{parent}/{name}")
+    got = list(t.range((2, ""), (2, "￿")))
+    assert [k for k, _ in got] == [(2, "a"), (2, "b"), (2, "c"), (2, "d")]
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from("pd"), st.integers(0, 300)), max_size=400))
+def test_btree_matches_dict_oracle(ops):
+    t, oracle = BTree(), {}
+    for op, k in ops:
+        if op == "p":
+            t.put(k, k + 1)
+            oracle[k] = k + 1
+        else:
+            assert t.delete(k) == (k in oracle)
+            oracle.pop(k, None)
+    assert len(t) == len(oracle)
+    assert dict(t.items()) == oracle
+    assert [k for k, _ in t.items()] == sorted(oracle)
+
+
+def test_random_churn_large():
+    rng = random.Random(0)
+    t, oracle = BTree(), {}
+    for _ in range(5000):
+        k = rng.randrange(800)
+        if rng.random() < 0.6:
+            t.put(k, k)
+            oracle[k] = k
+        else:
+            assert t.delete(k) == (k in oracle)
+            oracle.pop(k, None)
+    assert dict(t.items()) == oracle
+    assert t.min_key() == (min(oracle) if oracle else None)
+    assert t.max_key() == (max(oracle) if oracle else None)

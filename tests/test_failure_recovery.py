@@ -1,0 +1,134 @@
+"""Failure injection: the paper's recovery stories (§2.1.3, §2.2.5, §2.3.3)."""
+
+import pytest
+
+from repro.core import CfsCluster
+
+
+@pytest.fixture()
+def cluster():
+    c = CfsCluster(n_meta=4, n_data=8, extent_max_size=1024 * 1024, seed=7)
+    c.create_volume("v", n_meta_partitions=3, n_data_partitions=6)
+    return c
+
+
+def test_data_node_death_mid_write_resends_remainder(cluster):
+    """§2.2.5: if only p of k MB commit, the client resends k-p elsewhere."""
+    mnt = cluster.mount("v")
+    data0 = b"A" * (512 * 1024)
+    f = mnt.open("/big.bin", "w")
+    f.write(data0)
+    f.fsync()
+    # kill a backup replica of every partition the file touched
+    touched_pids = {k.partition_id for k in f._extents}
+    victims = set()
+    for pid in touched_pids:
+        dp = mnt.client._dp(pid)
+        victims.add(dp.replicas[1])
+    for v in victims:
+        cluster.kill_node(v)
+    # keep writing: the chain breaks, partition goes RO, client must switch
+    data1 = b"B" * (512 * 1024)
+    f.write(data1)
+    f.close()
+    got = mnt.read_file("/big.bin")
+    assert got == data0 + data1
+    # the partitions with dead backups were marked read-only
+    stats = {p.pid: p.status for p in mnt.client.data_partitions}
+    assert any(s == "ro" for s in stats.values())
+
+
+def test_reads_never_see_uncommitted_tail(cluster):
+    """Stale bytes on a replica are allowed but never served."""
+    mnt = cluster.mount("v")
+    mnt.write_file("/c.bin", b"x" * (300 * 1024))
+    st = mnt.stat("/c.bin")
+    (pid, eid, _, eoff, size) = st["extents"][0]
+    dp = mnt.client._dp(pid)
+    leader = cluster.data_nodes[dp.replicas[0]]
+    rep = leader.partitions[pid]
+    # fake a stale tail on the leader's store (as if a chain write half-landed)
+    rep.store.get(eid).data.extend(b"JUNK")
+    rep.store.get(eid).size += 4
+    committed = rep.committed_size(eid)
+    with pytest.raises(Exception):
+        rep.read(eid, committed, 4)          # beyond committed offset
+    assert mnt.read_file("/c.bin") == b"x" * (300 * 1024)
+
+
+def test_recovery_aligns_extents(cluster):
+    """§2.2.5 step 1: recovery checks and aligns all extents."""
+    mnt = cluster.mount("v")
+    mnt.write_file("/r.bin", b"y" * (256 * 1024))
+    st = mnt.stat("/r.bin")
+    (pid, eid, _, eoff, size) = st["extents"][0]
+    dp = mnt.client._dp(pid)
+    backup_id = dp.replicas[1]
+    cluster.kill_node(backup_id)
+    # more writes the dead backup misses (to a different file but same vol)
+    f = mnt.open("/r.bin", "a")
+    f.write(b"z" * (128 * 1024))
+    f.close()
+    cluster.recover_data_node(backup_id)
+    leader_rep = cluster.data_nodes[dp.replicas[0]].partitions[pid]
+    backup_rep = cluster.data_nodes[backup_id].partitions[pid]
+    for e_id, ext in leader_rep.store.extents.items():
+        committed = leader_rep.committed_size(e_id)
+        assert backup_rep.store.get(e_id).size == committed
+
+
+def test_meta_leader_failover(cluster):
+    """Kill a meta partition leader; raft elects a new one; ops continue."""
+    mnt = cluster.mount("v")
+    mnt.write_file("/before.txt", b"1")
+    mp = mnt.client.meta_partitions[0]
+    gid = f"mp{mp.pid}"
+    leader = cluster.rc.leader_of(gid)
+    cluster.kill_node(leader)
+    # failure detection + re-election take (simulated) time: tick the fabric
+    cluster.rc.tick_all(40)
+    assert cluster.rc.leader_of(gid) is not None
+    mnt2 = cluster.mount("v")
+    mnt2.write_file("/after.txt", b"2")       # retries find the new leader
+    assert mnt2.read_file("/before.txt") == b"1"
+    assert mnt2.read_file("/after.txt") == b"2"
+
+
+def test_rm_failover(cluster):
+    """RM has 3 replicas; killing the leader keeps the control plane alive."""
+    leader = cluster.rm.leader_id()
+    cluster.kill_node(leader)
+    new_leader = cluster.rc.elect("rm")
+    assert new_leader != leader
+    view = cluster.rm.client_view("v")
+    assert view["meta"] and view["data"]
+    mnt = cluster.mount("v")
+    mnt.write_file("/rmfo.txt", b"ok")
+    assert mnt.read_file("/rmfo.txt") == b"ok"
+
+
+def test_orphan_inode_on_dentry_failure(cluster):
+    """Fig. 3 failure arm: inode created, dentry fails -> orphan list -> evict."""
+    mnt = cluster.mount("v")
+    mnt.write_file("/dup", b"first")
+    before_orphans = len(mnt.client.orphan_inodes)
+    with pytest.raises(Exception):
+        mnt.client.create(1, "dup")          # dentry exists -> failure arm
+    assert len(mnt.client.orphan_inodes) == before_orphans + 1
+    evicted = mnt.client.evict_orphans()
+    assert evicted >= 1
+    assert not mnt.client.orphan_inodes
+
+
+def test_client_leader_cache_reduces_retries(cluster):
+    """§2.4: after one failover the client caches the new leader."""
+    mnt = cluster.mount("v")
+    mnt.write_file("/lc.bin", b"d" * 4096)
+    st = mnt.stat("/lc.bin")
+    pid = st["extents"][0][0]
+    # first read populates the cache; later reads go straight to the leader
+    mnt.read_file("/lc.bin")
+    assert f"dp{pid}" in mnt.client.leader_cache
+    calls0 = mnt.client.stats["data_calls"]
+    mnt.read_file("/lc.bin")
+    assert mnt.client.stats["data_calls"] == calls0 + 1  # exactly one RPC

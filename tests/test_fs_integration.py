@@ -1,0 +1,179 @@
+"""End-to-end behaviour tests of the CFS cluster (paper §2 workflows)."""
+
+import pytest
+
+from repro.core import CfsCluster, Exists, NotFound
+from repro.core.types import SMALL_FILE_THRESHOLD
+
+
+@pytest.fixture(scope="module")
+def cluster():
+    c = CfsCluster(n_meta=4, n_data=6, extent_max_size=1024 * 1024)
+    c.create_volume("vol1", n_meta_partitions=3, n_data_partitions=8)
+    return c
+
+
+@pytest.fixture()
+def mnt(cluster):
+    return cluster.mount("vol1")
+
+
+def test_create_write_read_small(mnt):
+    data = b"hello cfs" * 100           # < 128 KB -> small-file path
+    mnt.write_file("/small.txt", data)
+    assert mnt.read_file("/small.txt") == data
+    st = mnt.stat("/small.txt")
+    assert st["size"] == len(data)
+    # aggregated into a shared extent at a nonzero-capable physical offset
+    assert len(st["extents"]) == 1
+
+
+def test_create_write_read_large(mnt):
+    data = bytes(range(256)) * 4096     # 1 MB -> large-file path, many packets
+    mnt.write_file("/large.bin", data)
+    assert mnt.read_file("/large.bin") == data
+    st = mnt.stat("/large.bin")
+    assert st["size"] == len(data)
+    assert len(st["extents"]) >= 1
+
+
+def test_directories_and_readdir(mnt):
+    mnt.mkdir("/dir")
+    mnt.mkdir("/dir/sub")
+    for i in range(10):
+        mnt.write_file(f"/dir/f{i}", b"x" * i)
+    names = sorted(mnt.readdir("/dir"))
+    assert names == sorted([f"f{i}" for i in range(10)] + ["sub"])
+    stats = mnt.dir_stat("/dir")
+    by_name = {d["name"]: d for d in stats}
+    assert by_name["f7"]["attr"]["size"] == 7
+
+
+def test_unlink_and_not_found(mnt):
+    mnt.write_file("/gone.txt", b"bye")
+    mnt.unlink("/gone.txt")
+    with pytest.raises(NotFound):
+        mnt.read_file("/gone.txt")
+    with pytest.raises(NotFound):
+        mnt.unlink("/gone.txt")
+
+
+def test_exists_raises(mnt):
+    mnt.write_file("/dup.txt", b"1")
+    with pytest.raises(Exists):
+        mnt.create("/dup.txt")
+
+
+def test_hardlink_shares_content(mnt):
+    mnt.write_file("/orig.txt", b"shared")
+    mnt.link("/orig.txt", "/alias.txt")
+    assert mnt.read_file("/alias.txt") == b"shared"
+    assert mnt.stat("/alias.txt")["nlink"] == 2
+    mnt.unlink("/orig.txt")
+    # content survives through the second link
+    assert mnt.read_file("/alias.txt") == b"shared"
+
+
+def test_symlink(mnt):
+    mnt.write_file("/target.txt", b"t")
+    mnt.symlink("/target.txt", "/ln.txt")
+    assert mnt.readlink("/ln.txt") == "/target.txt"
+
+
+def test_rename(mnt):
+    mnt.write_file("/old_name", b"payload")
+    mnt.rename("/old_name", "/new_name")
+    assert mnt.read_file("/new_name") == b"payload"
+    assert not mnt.exists("/old_name")
+
+
+def test_rmdir_empty_only(mnt):
+    mnt.mkdir("/rmme")
+    mnt.write_file("/rmme/f", b"x")
+    from repro.core.client import DirNotEmpty
+    with pytest.raises(DirNotEmpty):
+        mnt.rmdir("/rmme")
+    mnt.unlink("/rmme/f")
+    mnt.rmdir("/rmme")
+    assert not mnt.exists("/rmme")
+
+
+def test_random_overwrite_inplace(mnt):
+    data = bytes(range(256)) * 2048     # 512 KB
+    mnt.write_file("/rw.bin", data)
+    f = mnt.open("/rw.bin", "r+")
+    f.seek(1000)
+    f.write(b"OVERWRITE!")
+    f.close()
+    expect = bytearray(data)
+    expect[1000:1010] = b"OVERWRITE!"
+    got = mnt.read_file("/rw.bin")
+    assert got == bytes(expect)
+    # in-place: size unchanged
+    assert mnt.stat("/rw.bin")["size"] == len(data)
+
+
+def test_random_write_past_end_appends(mnt):
+    data = b"A" * (300 * 1024)
+    mnt.write_file("/mix.bin", data)
+    f = mnt.open("/mix.bin", "r+")
+    f.seek(len(data) - 10)
+    f.write(b"B" * 30)                   # 10 overwrite + 20 append
+    f.close()
+    got = mnt.read_file("/mix.bin")
+    assert len(got) == len(data) + 20
+    assert got[-30:] == b"B" * 30
+
+
+def test_append_mode(mnt):
+    mnt.write_file("/app.log", b"line1\n")
+    f = mnt.open("/app.log", "a")
+    f.write(b"line2\n")
+    f.close()
+    assert mnt.read_file("/app.log") == b"line1\nline2\n"
+
+
+def test_multiple_clients_share_volume(cluster):
+    m1 = cluster.mount("vol1")
+    m2 = cluster.mount("vol1")
+    m1.write_file("/shared_x", b"from c1")
+    assert m2.read_file("/shared_x") == b"from c1"
+    m2.unlink("/shared_x")
+    assert not m1.exists("/shared_x")
+
+
+def test_small_file_delete_punches_holes(cluster, mnt):
+    data = b"z" * 1000
+    mnt.write_file("/hole.bin", data)
+    stores_with_pending = 0
+    mnt.unlink("/hole.bin")
+    for dn in cluster.data_nodes.values():
+        for rep in dn.partitions.values():
+            stores_with_pending += rep.store.pending_punches
+    assert stores_with_pending >= 1      # queued, not yet freed (async)
+    freed = cluster.run_background_tasks()
+    assert freed >= len(data)            # every replica frees its copy
+
+
+def test_large_file_delete_drops_extents(cluster, mnt):
+    data = b"q" * (512 * 1024)
+    mnt.write_file("/bigdel.bin", data)
+    used_before = sum(dn.disk.used for dn in cluster.data_nodes.values())
+    mnt.unlink("/bigdel.bin")
+    cluster.run_background_tasks()
+    used_after = sum(dn.disk.used for dn in cluster.data_nodes.values())
+    assert used_before - used_after >= len(data)  # 3 replicas freed
+
+
+def test_client_caches_reduce_meta_calls(cluster):
+    mnt = cluster.mount("vol1")
+    mnt.mkdir("/cached")
+    for i in range(20):
+        mnt.write_file(f"/cached/f{i}", b"x")
+    mnt.dir_stat("/cached")              # fills inode cache via batchInodeGet
+    calls_before = mnt.client.stats["meta_calls"]
+    hits_before = mnt.client.stats["cache_hits"]
+    mnt.dir_stat("/cached")              # second run: cache hits
+    assert mnt.client.stats["cache_hits"] > hits_before
+    # second dir_stat costs only the readdir (1 meta call), not 20 inodeGets
+    assert mnt.client.stats["meta_calls"] - calls_before <= 2

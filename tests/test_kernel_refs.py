@@ -1,0 +1,145 @@
+"""Chunked/blockwise reference implementations vs naive oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.mark.parametrize("tq,tk,window", [
+    (64, 64, 0), (128, 128, 0), (100, 100, 0),
+    (128, 128, 32), (256, 256, 64),
+])
+def test_flash_matches_naive(tq, tk, window):
+    key = jax.random.PRNGKey(0)
+    b, kv, g, hd = 2, 2, 2, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, tq, kv, g, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, tk, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, tk, kv, hd), jnp.float32)
+    out = ref.flash_attention(q, k, v, window=window, block_q=32, block_k=32)
+    oracle = ref.attention_naive(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_decode_offset():
+    """q is a suffix of the sequence (prefill continuation)."""
+    key = jax.random.PRNGKey(1)
+    b, kv, g, hd, tk = 1, 2, 1, 16, 96
+    tq = 32
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, tq, kv, g, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, tk, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, tk, kv, hd), jnp.float32)
+    out = ref.flash_attention(q, k, v, q_offset=tk - tq,
+                              block_q=16, block_k=32)
+    oracle = ref.attention_naive(q, k, v, q_offset=tk - tq)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("t,chunk", [(64, 16), (100, 32), (128, 128)])
+def test_rwkv6_chunked_matches_naive(t, chunk):
+    key = jax.random.PRNGKey(2)
+    b, h, kd, vd = 2, 2, 8, 8
+    ks = jax.random.split(key, 6)
+    r = jax.random.normal(ks[0], (b, t, h, kd), jnp.float32) * 0.5
+    k = jax.random.normal(ks[1], (b, t, h, kd), jnp.float32) * 0.5
+    v = jax.random.normal(ks[2], (b, t, h, vd), jnp.float32) * 0.5
+    # w in (0,1): data-dependent decay
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, kd)) - 1.0)
+    u = jax.random.normal(ks[4], (h, kd), jnp.float32) * 0.3
+    s0 = jax.random.normal(ks[5], (b, h, kd, vd), jnp.float32) * 0.2
+    y_naive, s_naive = ref.rwkv6_naive(r, k, v, w, u, s0)
+    y_chunk, s_chunk = ref.rwkv6_chunked(r, k, v, w, u, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_naive),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s_chunk), np.asarray(s_naive),
+                               rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("t,chunk", [(64, 16), (100, 32)])
+def test_mamba2_ssd_matches_naive(t, chunk):
+    key = jax.random.PRNGKey(3)
+    bt, h, p, n = 2, 3, 8, 4
+    ks = jax.random.split(key, 6)
+    x = jax.random.normal(ks[0], (bt, t, h, p), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bt, t, h)) - 1.0)
+    A = -jnp.abs(jax.random.normal(ks[2], (h,)))
+    B = jax.random.normal(ks[3], (bt, t, n), jnp.float32) * 0.5
+    C = jax.random.normal(ks[4], (bt, t, n), jnp.float32) * 0.5
+    s0 = jax.random.normal(ks[5], (bt, h, p, n), jnp.float32) * 0.2
+    y_naive, s_naive = ref.mamba2_naive(x, dt, A, B, C, s0)
+    y_ssd, s_ssd = ref.mamba2_ssd(x, dt, A, B, C, s0, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_ssd), np.asarray(y_naive),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s_ssd), np.asarray(s_naive),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_checksum_detects_corruption_and_reorder():
+    data = jnp.arange(10000, dtype=jnp.uint32)
+    c0 = ref.checksum(data)
+    corrupted = data.at[1234].set(999999)
+    assert not np.array_equal(np.asarray(c0), np.asarray(ref.checksum(corrupted)))
+    swapped = data.at[10].set(data[20]).at[20].set(data[10])
+    assert not np.array_equal(np.asarray(c0), np.asarray(ref.checksum(swapped)))
+    # block size must not matter (associative combine)
+    c_small = ref.checksum(data, block=512)
+    np.testing.assert_array_equal(np.asarray(c0), np.asarray(c_small))
+
+
+@pytest.mark.parametrize("tq,window", [(96, 0), (128, 32)])
+def test_flash_custom_vjp_matches_naive_grads(tq, window):
+    """The flash backward (recompute-based custom VJP) == autodiff oracle."""
+    key = jax.random.PRNGKey(7)
+    b, kv, g, hd = 2, 2, 2, 16
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, tq, kv, g, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, tq, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, tq, kv, hd), jnp.float32)
+    co = jax.random.normal(ks[3], (b, tq, kv, g, hd), jnp.float32)
+
+    def f_flash(q, k, v):
+        return jnp.sum(ref.flash_attention(q, k, v, window=window,
+                                           block_q=32, block_k=32) * co)
+
+    def f_naive(q, k, v):
+        return jnp.sum(ref.attention_naive(q, k, v, window=window) * co)
+
+    gf = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    gn = jax.grad(f_naive, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gf, gn):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_rwkv6_chunked_grads_match_naive():
+    key = jax.random.PRNGKey(8)
+    b, t, h, kd, vd = 1, 48, 2, 8, 8
+    ks = jax.random.split(key, 6)
+    r = jax.random.normal(ks[0], (b, t, h, kd)) * 0.5
+    k = jax.random.normal(ks[1], (b, t, h, kd)) * 0.5
+    v = jax.random.normal(ks[2], (b, t, h, vd)) * 0.5
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (b, t, h, kd)) - 1.0)
+    u = jax.random.normal(ks[4], (h, kd)) * 0.3
+    s0 = jnp.zeros((b, h, kd, vd))
+
+    def loss(fn, chunks):
+        def f(r, k, v, w, u):
+            y, _ = fn(r, k, v, w, u, s0, **chunks)
+            return jnp.sum(y * y)
+        return f
+
+    gn = jax.grad(loss(ref.rwkv6_naive, {}), argnums=(0, 1, 2, 3, 4))(
+        r, k, v, w, u)
+    gc = jax.grad(loss(ref.rwkv6_chunked, {"chunk": 16}),
+                  argnums=(0, 1, 2, 3, 4))(r, k, v, w, u)
+    for a, b_ in zip(gc, gn):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-2, atol=1e-2)

@@ -1,0 +1,120 @@
+"""Per-arch smoke tests: REDUCED config, one forward + train-grad step +
+prefill/decode on CPU; asserts shapes and no NaNs (assignment requirement)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_arch
+from repro.models import get_model
+from repro.models.layers import padded_vocab
+
+B, T = 2, 32
+SMAX = 48
+
+
+def _batch(cfg, key):
+    toks = jax.random.randint(key, (B, T), 0, cfg.vocab, jnp.int32)
+    return {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_forward_and_grad(arch, rng):
+    cfg = get_arch(arch).reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.fold_in(rng, hash(arch) & 0xFFFF),
+                      jnp.float32)
+    batch = _batch(cfg, jax.random.fold_in(rng, 1))
+
+    loss, grads = jax.value_and_grad(api.loss)(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    leaf_ok = jax.tree.map(lambda g: bool(jnp.all(jnp.isfinite(g))), grads)
+    assert all(jax.tree.leaves(leaf_ok)), f"{arch}: non-finite grads"
+    # loss near log(vocab) at init (model is actually predicting)
+    assert 0.2 * np.log(cfg.vocab) < float(loss) < 3 * np.log(cfg.vocab)
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_prefill_decode_consistency(arch, rng):
+    """decode(prefill(prompt)) logits == forward(prompt+token) logits."""
+    cfg = get_arch(arch).reduced()
+    if cfg.family == "moe":
+        # capacity-based token dropping legitimately differs between
+        # full-sequence and per-step routing; disable drops for this test
+        import dataclasses
+        cfg = dataclasses.replace(cfg, capacity_factor=float(cfg.n_experts))
+    api = get_model(cfg)
+    params = api.init(jax.random.fold_in(rng, hash(arch) & 0xFFF), jnp.float32)
+    toks = jax.random.randint(jax.random.fold_in(rng, 2), (B, T), 0,
+                              cfg.vocab, jnp.int32)
+
+    logits_p, cache = api.prefill(params, toks, SMAX, "bfloat16", remat=False)
+    V = padded_vocab(cfg)
+    assert logits_p.shape == (B, 1, V)
+    assert np.all(np.isfinite(np.asarray(logits_p, np.float32)))
+
+    nxt = jnp.argmax(logits_p[:, -1, : cfg.vocab], axis=-1).astype(jnp.int32)
+    logits_d, cache2 = api.decode(params, nxt[:, None], cache,
+                                  jnp.int32(T))
+    assert logits_d.shape == (B, 1, V)
+    assert np.all(np.isfinite(np.asarray(logits_d, np.float32)))
+
+    # oracle: full forward over the extended sequence
+    full = jnp.concatenate([toks, nxt[:, None]], axis=1)
+    logits_full, _ = api.prefill(params, full, SMAX + 1, "bfloat16",
+                                 remat=False)
+    np.testing.assert_allclose(
+        np.asarray(logits_d[:, 0], np.float32),
+        np.asarray(logits_full[:, -1], np.float32), rtol=3e-2, atol=3e-2)
+
+
+def test_param_counts_match_configs():
+    """Full-size param counts are in the advertised ballpark."""
+    expected = {
+        "codeqwen1.5-7b": (6e9, 9e9),
+        "phi3-medium-14b": (12e9, 16e9),
+        "minicpm-2b": (2e9, 3.5e9),
+        "qwen1.5-32b": (30e9, 36e9),
+        "rwkv6-1.6b": (1.4e9, 2.2e9),
+        "arctic-480b": (430e9, 530e9),
+        "mixtral-8x22b": (120e9, 160e9),
+        "zamba2-7b": (6e9, 9e9),
+        "musicgen-large": (1.5e9, 3.5e9),
+        "chameleon-34b": (30e9, 38e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = get_arch(arch).param_count()
+        assert lo < n < hi, f"{arch}: {n/1e9:.2f}B params not in [{lo/1e9}, {hi/1e9}]"
+
+
+def test_moe_capacity_drops_are_bounded():
+    """Router + capacity: most tokens must be routed, not dropped."""
+    cfg = get_arch("mixtral-8x22b").reduced()
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(3), jnp.float32)
+    batch = _batch(cfg, jax.random.PRNGKey(4))
+    loss1 = float(api.loss(params, batch))
+    assert np.isfinite(loss1)
+
+
+def test_swa_restricts_context():
+    """mixtral's sliding window: distant tokens do not affect logits."""
+    cfg = get_arch("mixtral-8x22b").reduced()  # window 64 > T: widen T
+    import dataclasses
+    cfg = dataclasses.replace(cfg, swa_window=8, n_layers=1)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(5), jnp.float32)
+    t = 32
+    toks = jax.random.randint(jax.random.PRNGKey(6), (1, t), 0, cfg.vocab,
+                              jnp.int32)
+    logits1, _ = api.prefill(params, toks, t, remat=False)
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 1) % cfg.vocab)  # outside window
+    logits2, _ = api.prefill(params, toks2, t, remat=False)
+    np.testing.assert_allclose(np.asarray(logits1), np.asarray(logits2),
+                               rtol=1e-4, atol=1e-4)

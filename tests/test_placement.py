@@ -1,0 +1,139 @@
+"""Utilization-based placement + Algorithm 1 splitting (paper §2.3)."""
+
+import pytest
+
+from repro.core import CfsCluster
+from repro.core.resource_manager import SPLIT_DELTA
+from repro.core.types import MAX_UINT64
+
+
+def test_new_partitions_go_to_least_utilized_nodes():
+    c = CfsCluster(n_meta=4, n_data=6, extent_max_size=1024 * 1024)
+    c.create_volume("v", n_meta_partitions=2, n_data_partitions=4)
+    mnt = c.mount("v")
+    for i in range(12):
+        mnt.write_file(f"/f{i}", b"x" * (256 * 1024))
+    c.tick(2)  # heartbeats report utilization
+    # add an empty data node; create another volume -> its partitions should
+    # prefer the new (0-utilization) node
+    new_node = c.add_data_node()
+    c.tick(2)
+    c.create_volume("v2", n_meta_partitions=1, n_data_partitions=3)
+    sm = c.rm.leader_sm()
+    v2_nodes = [nid for pid in sm.volumes["v2"]["data"]
+                for nid in sm.partitions[pid].replicas]
+    assert new_node.node_id in v2_nodes
+
+
+def test_capacity_expansion_moves_no_data():
+    """THE paper claim: adding nodes requires no rebalancing — existing
+    partitions stay put, bytes on old nodes are untouched."""
+    c = CfsCluster(n_meta=4, n_data=6, extent_max_size=1024 * 1024)
+    c.create_volume("v", n_meta_partitions=2, n_data_partitions=4)
+    mnt = c.mount("v")
+    for i in range(8):
+        mnt.write_file(f"/f{i}", b"x" * (200 * 1024))
+    c.tick(3)   # quiesce: let followers apply the last committed entries
+    sm = c.rm.leader_sm()
+    placement_before = {pid: list(p.replicas) for pid, p in sm.partitions.items()}
+    used_before = {nid: dn.disk.used for nid, dn in c.data_nodes.items()}
+    mem_before = {nid: mn.mem_used() for nid, mn in c.meta_nodes.items()}
+    # expand: 2 data nodes + 1 meta node
+    c.add_data_node()
+    c.add_data_node()
+    c.add_meta_node()
+    c.tick(3)
+    # no partition moved, no byte moved, no inode moved
+    sm = c.rm.leader_sm()
+    for pid, reps in placement_before.items():
+        assert sm.partitions[pid].replicas == reps
+    for nid, used in used_before.items():
+        assert c.data_nodes[nid].disk.used == used
+    for nid, used in mem_before.items():
+        assert c.meta_nodes[nid].mem_used() == used
+
+
+def test_meta_partition_split_algorithm1():
+    """Algorithm 1: cut range at maxInodeID + Δ; sibling gets [end+1, ∞)."""
+    c = CfsCluster(n_meta=4, n_data=4, extent_max_size=1024 * 1024,
+                   meta_max_entries=200)
+    c.create_volume("v", n_meta_partitions=1, n_data_partitions=3)
+    sm = c.rm.leader_sm()
+    [pid0] = sm.volumes["v"]["meta"]
+    assert sm.partitions[pid0].end == MAX_UINT64
+    mnt = c.mount("v")
+    # fill past the split threshold (inode+dentry each count toward entries)
+    for i in range(90):
+        mnt.write_file(f"/s{i}", b"k")
+    c.tick(2)          # heartbeat reports entries -> RM splits
+    sm = c.rm.leader_sm()
+    metas = sm.volumes["v"]["meta"]
+    assert len(metas) >= 2, "split did not happen"
+    old = sm.partitions[pid0]
+    new_pid = max(metas)
+    new = sm.partitions[new_pid]
+    assert old.end != MAX_UINT64
+    assert new.start == old.end + 1
+    assert new.end == MAX_UINT64
+    # inode ids stay unique: new files allocate from either side correctly
+    for i in range(20):
+        mnt.write_file(f"/post{i}", b"p")
+    seen = set()
+    for node in c.meta_nodes.values():
+        for p in node.partitions.values():
+            for ino, _ in p.inode_tree.items():
+                key = ino
+                assert key not in seen or True
+    # stronger: collect all inode ids across partitions of the volume; no dups
+    all_inos = []
+    counted = set()
+    for node in c.meta_nodes.values():
+        for mp_id, p in node.partitions.items():
+            if p.volume != "v" or mp_id in counted:
+                continue
+            counted.add(mp_id)
+            all_inos.extend(ino for ino, _ in p.inode_tree.items())
+    assert len(all_inos) == len(set(all_inos))
+    # ranges are disjoint
+    ranges = sorted((sm.partitions[m].start, sm.partitions[m].end) for m in metas)
+    for (s1, e1), (s2, e2) in zip(ranges, ranges[1:]):
+        assert e1 < s2
+
+
+def test_volume_auto_expansion_adds_partitions():
+    c = CfsCluster(n_meta=4, n_data=6, extent_max_size=256 * 1024)
+    c.create_volume("v", n_meta_partitions=2, n_data_partitions=2)
+    mnt = c.mount("v")
+    sm = c.rm.leader_sm()
+    n_before = len(sm.volumes["v"]["data"])
+    # cripple both initial partitions by killing one backup each -> RO
+    pids = list(sm.volumes["v"]["data"])
+    for pid in pids:
+        backup = sm.partitions[pid].replicas[1]
+        c.kill_node(backup)
+    # writes force the client to discover RO and report; RM then expands
+    try:
+        mnt.write_file("/x", b"x" * (200 * 1024))
+    except Exception:
+        pass
+    c.tick(3)
+    sm = c.rm.leader_sm()
+    assert len(sm.volumes["v"]["data"]) > n_before
+    # and the volume is writable again end-to-end
+    mnt2 = c.mount("v")
+    mnt2.write_file("/y", b"y" * (100 * 1024))
+    assert mnt2.read_file("/y") == b"y" * (100 * 1024)
+
+
+def test_raft_set_placement_bounds_heartbeat_pairs():
+    """§2.5.1: replicas co-locate within a raft set, so beat partners are
+    bounded by the set size, not the cluster size."""
+    c = CfsCluster(n_meta=4, n_data=12, raft_set_size=4,
+                   extent_max_size=1024 * 1024)
+    c.create_volume("v", n_meta_partitions=2, n_data_partitions=12)
+    sm = c.rm.leader_sm()
+    for pid, p in sm.partitions.items():
+        if p.kind != "data":
+            continue
+        zones = {sm.nodes[nid]["zone"] for nid in p.replicas}
+        assert len(zones) == 1, f"partition {pid} spans raft sets: {zones}"

@@ -1,0 +1,113 @@
+"""Hypothesis property tests: raft safety invariants under random fault
+schedules (kill / revive / partition / heal / propose / tick)."""
+
+from typing import Dict
+
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.multiraft import RaftCluster
+from repro.core.raft import NotCommitted, NotLeader, Role, SMError, StateMachine
+from repro.core.simnet import NetError, Network
+
+N = 5
+NODES = [f"n{i}" for i in range(N)]
+
+
+class LogSM(StateMachine):
+    def __init__(self):
+        self.log = []
+
+    def apply(self, payload):
+        self.log.append(payload)
+        return len(self.log)
+
+    def snapshot(self):
+        return list(self.log)
+
+    def restore(self, snap):
+        self.log = list(snap)
+
+
+event = st.one_of(
+    st.tuples(st.just("tick"), st.integers(1, 8)),
+    st.tuples(st.just("propose"), st.integers(0, 999)),
+    st.tuples(st.just("kill"), st.integers(0, N - 1)),
+    st.tuples(st.just("revive"), st.integers(0, N - 1)),
+    st.tuples(st.just("partition"), st.integers(1, N - 1)),
+    st.tuples(st.just("heal"), st.integers(0, 0)),
+)
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(st.lists(event, min_size=5, max_size=60))
+def test_raft_safety_under_faults(events):
+    net = Network(seed=1)
+    rc = RaftCluster(net)
+    rc.add_group("g", NODES, lambda nid: LogSM())
+    committed_prefix = []
+    seq = 0
+
+    for kind, arg in events:
+        if kind == "tick":
+            rc.tick_all(arg)
+        elif kind == "propose":
+            leader = rc.leader_of("g")
+            if leader is None:
+                continue
+            m = rc.member("g", leader)
+            seq += 1
+            try:
+                m.propose(("cmd", arg), client_id="prop", seq=seq)
+            except (NotLeader, NotCommitted, NetError):
+                pass
+        elif kind == "kill":
+            if len(net.dead_nodes) < N // 2:   # keep a majority alive
+                net.kill(NODES[arg])
+        elif kind == "revive":
+            net.revive(NODES[arg])
+        elif kind == "partition":
+            net.partition(NODES[:arg], NODES[arg:])
+        elif kind == "heal":
+            net.heal()
+
+        # INVARIANT 1: at most one leader per term
+        terms: Dict[int, str] = {}
+        for nid in NODES:
+            m = rc.member("g", nid)
+            if m.role == Role.LEADER:
+                assert terms.setdefault(m.term, nid) == nid, \
+                    f"two leaders in term {m.term}"
+
+        # INVARIANT 2: committed logs are prefix-consistent across replicas
+        states = []
+        for nid in NODES:
+            m = rc.member("g", nid)
+            states.append(m.sm.log[: m.applied])
+        for a in states:
+            for b in states:
+                shorter, longer = (a, b) if len(a) <= len(b) else (b, a)
+                assert longer[: len(shorter)] == shorter, \
+                    "divergent committed prefixes"
+
+        # INVARIANT 3: previously committed entries never disappear
+        longest = max(states, key=len)
+        assert longest[: len(committed_prefix)] == committed_prefix
+        if len(longest) > len(committed_prefix):
+            committed_prefix = list(longest)
+
+    # liveness-ish: after healing everything, the group converges
+    net.heal()
+    for nid in list(net.dead_nodes):
+        net.revive(nid)
+    rc.tick_all(60)
+    leader = rc.leader_of("g")
+    assert leader is not None
+    m = rc.member("g", leader)
+    m.propose(("final", 0), client_id="prop", seq=10_000)
+    rc.tick_all(10)
+    logs = [rc.member("g", nid).sm.log[: rc.member("g", nid).applied]
+            for nid in NODES]
+    assert all(log == logs[0] for log in logs), "logs failed to converge"
