@@ -10,7 +10,8 @@ from __future__ import annotations
 import random
 from typing import List
 
-from repro.core import CfsCluster
+from repro.core import (CfsCluster, O_CREAT, O_RDONLY, O_RDWR, O_TRUNC,
+                        O_WRONLY)
 from repro.baseline.cephlike import CephLikeCluster, CephLikeMount
 
 from .common import BenchResult, run_streams
@@ -46,10 +47,10 @@ def bench_large(system: str, cluster, clients: int, procs: int
 
         def one_file():
             if system == "cfs":
-                f = mnt.open(path, "w")
+                fd = mnt.open(path, O_WRONLY | O_CREAT | O_TRUNC)
                 for _ in range(FILE_SIZE // SEQ_IO):
-                    f.write(data)
-                f.close()
+                    mnt.write(fd, data)
+                mnt.close(fd)
             else:
                 mnt.write_file(path, bytes(FILE_SIZE))
         return [one_file]
@@ -65,9 +66,10 @@ def bench_large(system: str, cluster, clients: int, procs: int
 
         def one_file():
             if system == "cfs":
-                f = mnt.open(path, "r")
+                fd = mnt.open(path, O_RDONLY)
                 for _ in range(FILE_SIZE // SEQ_IO):
-                    f.read(SEQ_IO)
+                    mnt.read(fd, SEQ_IO)
+                mnt.close(fd)
             else:
                 mnt.read_file(path)
         return [one_file]
@@ -76,7 +78,7 @@ def bench_large(system: str, cluster, clients: int, procs: int
         [(_cid(m), sr(m, ci, pi)) for ci, m in enumerate(mounts)
          for pi in range(procs)], clients, procs, weight=ios))
 
-    # --- random read: 4K at random offsets (fd kept open, like fio) ---------
+    # --- random read: 4K pread at random offsets (fd kept open, like fio) ---
     def rr(mnt, ci, pi):
         path = files[(ci, pi)]
         offs = [rng.randrange(0, FILE_SIZE - RAND_IO) for _ in range(N_RAND)]
@@ -85,10 +87,9 @@ def bench_large(system: str, cluster, clients: int, procs: int
 
             def make(o):
                 def op():
-                    if "f" not in state:
-                        state["f"] = mnt.open(path, "r")
-                    state["f"].seek(o)
-                    state["f"].read(RAND_IO)
+                    if "fd" not in state:
+                        state["fd"] = mnt.open(path, O_RDONLY)
+                    mnt.pread(state["fd"], RAND_IO, o)
                 return op
             return [make(o) for o in offs]
         return [lambda o=o, mnt=mnt: mnt.read_range(path, o, RAND_IO)
@@ -98,7 +99,7 @@ def bench_large(system: str, cluster, clients: int, procs: int
         [(_cid(m), rr(m, ci, pi)) for ci, m in enumerate(mounts)
          for pi in range(procs)], clients, procs))
 
-    # --- random write: 4K in-place overwrites (fd kept open) -----------------
+    # --- random write: 4K in-place pwrite (fd kept open) ---------------------
     def rw(mnt, ci, pi):
         path = files[(ci, pi)]
         offs = [rng.randrange(0, FILE_SIZE - RAND_IO) for _ in range(N_RAND)]
@@ -108,10 +109,9 @@ def bench_large(system: str, cluster, clients: int, procs: int
 
             def make(o):
                 def op():
-                    if "f" not in state:
-                        state["f"] = mnt.open(path, "r+")
-                    state["f"].seek(o)
-                    state["f"].write(data)
+                    if "fd" not in state:
+                        state["fd"] = mnt.open(path, O_RDWR)
+                    mnt.pwrite(state["fd"], data, o)
                 return op
             return [make(o) for o in offs]
         return [lambda o=o, mnt=mnt: mnt.overwrite(path, o, data)

@@ -8,7 +8,8 @@ from __future__ import annotations
 
 from typing import Callable, List
 
-from repro.core import CfsCluster
+from repro.core import (CfsCluster, CfsVfs, O_CREAT, O_RDONLY, O_TRUNC,
+                        O_WRONLY)
 from repro.baseline.cephlike import CephLikeCluster, CephLikeMount
 
 from .common import BenchResult, run_streams
@@ -33,14 +34,44 @@ def make_ceph(n_nodes: int = 10):
 
 
 def _mounts(system, cluster, clients: int):
+    """CFS clients talk the fd/flags VFS API; the baseline keeps its own
+    path facade (mkdir/rmdir/unlink spell the same on both)."""
     if system == "cfs":
-        return [cluster.mount("bench", client_id=f"c{i}")
+        return [cluster.mount("bench", client_id=f"c{i}").vfs
                 for i in range(clients)]
     return [CephLikeMount(cluster, f"c{i}") for i in range(clients)]
 
 
 def _cid(mnt) -> str:
     return getattr(mnt, "client_id", None) or mnt.client.client_id
+
+
+# ---- system-portable file ops (CFS side = POSIX fd calls) -----------------
+def creat_file(mnt, path: str, data: bytes = b"") -> None:
+    """mdtest FileCreation: open(O_CREAT|O_TRUNC) + pwrite + close."""
+    if isinstance(mnt, CfsVfs):
+        fd = mnt.open(path, O_WRONLY | O_CREAT | O_TRUNC)
+        if data:
+            mnt.pwrite(fd, data, 0)
+        mnt.close(fd)
+    else:
+        mnt.write_file(path, data)
+
+
+def read_whole(mnt, path: str) -> bytes:
+    if isinstance(mnt, CfsVfs):
+        fd = mnt.open(path, O_RDONLY)
+        try:
+            return mnt.read(fd, -1)
+        finally:
+            mnt.close(fd)
+    return mnt.read_file(path)
+
+
+def dir_stat(mnt, path: str):
+    if isinstance(mnt, CfsVfs):
+        return mnt.readdir_plus(path)
+    return mnt.dir_stat(path)
 
 
 def _streams_for(mounts, procs: int, op_factory) -> List:
@@ -71,10 +102,10 @@ def bench_mdtest(system: str, cluster, clients: int, procs: int
     stat_dir = f"{base}/statdir"
     mounts[0].mkdir(stat_dir)
     for i in range(64):
-        mounts[0].write_file(f"{stat_dir}/f{i}", b"")
+        creat_file(mounts[0], f"{stat_dir}/f{i}")
 
     def ds(mnt, ci, pi):
-        return [lambda mnt=mnt: mnt.dir_stat(stat_dir) for _ in range(4)]
+        return [lambda mnt=mnt: dir_stat(mnt, stat_dir) for _ in range(4)]
     # each dir_stat touches 64 files: weight reports per-FILE-stat IOPS
     results.append(run_streams("DirStat", system, net,
                                _streams_for(mounts, procs, ds),
@@ -91,7 +122,7 @@ def bench_mdtest(system: str, cluster, clients: int, procs: int
     # --- FileCreation ----------------------------------------------------------
     def fc(mnt, ci, pi):
         return [lambda i=i, ci=ci, pi=pi, mnt=mnt:
-                mnt.write_file(f"{base}/f{ci}_{pi}_{i}", b"")
+                creat_file(mnt, f"{base}/f{ci}_{pi}_{i}")
                 for i in range(ITEMS)]
     results.append(run_streams("FileCreation", system, net,
                                _streams_for(mounts, procs, fc),

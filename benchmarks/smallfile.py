@@ -8,7 +8,8 @@ from __future__ import annotations
 from typing import List
 
 from .common import BenchResult, run_streams
-from .mdtest import make_cfs, make_ceph, _mounts, _cid
+from .mdtest import (creat_file, make_cfs, make_ceph, read_whole, _mounts,
+                     _cid)
 
 SIZES = [1024, 8 * 1024, 32 * 1024, 128 * 1024]
 N_FILES = 6
@@ -22,12 +23,12 @@ def bench_small(system: str, cluster, clients: int, procs: int,
 
     def wr(mnt, ci, pi):
         return [lambda i=i, mnt=mnt, ci=ci, pi=pi:
-                mnt.write_file(f"/sf{size}_{ci}_{pi}_{i}", data)
+                creat_file(mnt, f"/sf{size}_{ci}_{pi}_{i}", data)
                 for i in range(N_FILES)]
 
     def rd(mnt, ci, pi):
         return [lambda i=i, mnt=mnt, ci=ci, pi=pi:
-                mnt.read_file(f"/sf{size}_{ci}_{pi}_{i}")
+                read_whole(mnt, f"/sf{size}_{ci}_{pi}_{i}")
                 for i in range(N_FILES)]
 
     r_w = run_streams(f"SmallWrite_{size // 1024}K", system, net,

@@ -1,25 +1,36 @@
-"""Failure-injection demo: kill nodes mid-write and watch CFS recover.
+"""Failure-injection demo: kill nodes mid-write and watch CFS recover —
+driven through the POSIX-style VFS (fds + flags).
 
     PYTHONPATH=src python examples/failover_demo.py
 """
 
-from repro.core import CfsCluster
+from repro.core import (CfsCluster, O_CREAT, O_RDONLY, O_TRUNC, O_WRONLY)
 
 cluster = CfsCluster(n_meta=4, n_data=8, extent_max_size=1024 * 1024, seed=3)
 cluster.create_volume("v", n_meta_partitions=3, n_data_partitions=6)
-mnt = cluster.mount("v")
+vfs = cluster.mount("v").vfs
+
+
+def read_all(v, path):
+    fd = v.open(path, O_RDONLY)
+    try:
+        return v.read(fd, -1)
+    finally:
+        v.close(fd)
+
 
 # 1. kill a data backup mid-stream: committed prefix survives, the client
 #    resends the remainder to another partition (§2.2.5)
-f = mnt.open("/big.bin", "w")
-f.write(b"A" * (512 * 1024))
-f.fsync()
-victim = mnt.client._dp(f._extents[0].partition_id).replicas[1]
+fd = vfs.open("/big.bin", O_WRONLY | O_CREAT | O_TRUNC)
+vfs.pwrite(fd, b"A" * (512 * 1024), 0)
+vfs.fsync(fd)
+handle = vfs.handle(fd)                       # low-level peek for the demo
+victim = vfs.client._dp(handle._extents[0].partition_id).replicas[1]
 print(f"killing data node {victim} mid-write...")
 cluster.kill_node(victim)
-f.write(b"B" * (512 * 1024))
-f.close()
-data = mnt.read_file("/big.bin")
+vfs.pwrite(fd, b"B" * (512 * 1024), 512 * 1024)
+vfs.close(fd)
+data = read_all(vfs, "/big.bin")
 assert data == b"A" * (512 * 1024) + b"B" * (512 * 1024)
 print("write completed across the failure; read-back OK")
 
@@ -28,20 +39,25 @@ cluster.recover_data_node(victim)
 print(f"{victim} recovered (extents aligned to committed offsets)")
 
 # 3. kill a meta partition leader: raft re-elects, ops continue
-gid = f"mp{mnt.client.meta_partitions[0].pid}"
+gid = f"mp{vfs.client.meta_partitions[0].pid}"
 leader = cluster.rc.leader_of(gid)
 print(f"killing meta leader {leader}...")
 cluster.kill_node(leader)
 cluster.rc.tick_all(40)         # elections take (simulated) time
-m2 = cluster.mount("v")
-m2.write_file("/after_failover.txt", b"still alive")
+v2 = cluster.mount("v").vfs
+fd = v2.open("/after_failover.txt", O_WRONLY | O_CREAT)
+v2.pwrite(fd, b"still alive", 0)
+v2.close(fd)
 print("metadata ops survive leader loss:",
-      m2.read_file("/after_failover.txt").decode())
+      read_all(v2, "/after_failover.txt").decode())
 
 # 4. kill the RM leader: control plane fails over
 rm_leader = cluster.rm.leader_id()
 print(f"killing RM leader {rm_leader}...")
 cluster.kill_node(rm_leader)
 cluster.rc.elect("rm")
-cluster.mount("v").write_file("/rm_failover.txt", b"ok")
+v3 = cluster.mount("v").vfs
+fd = v3.open("/rm_failover.txt", O_WRONLY | O_CREAT)
+v3.pwrite(fd, b"ok", 0)
+v3.close(fd)
 print("control plane failed over; cluster still serves")

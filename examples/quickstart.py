@@ -1,39 +1,78 @@
-"""Quickstart: stand up a CFS cluster, mount a volume, use it like a
-filesystem — the paper's core loop in 40 lines.
+"""Quickstart: stand up a CFS cluster, mount a volume, use it through the
+POSIX-style VFS — fds, open flags, errno errors — in ~40 lines.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core import CfsCluster
+import errno
+
+from repro.core import (CfsCluster, CfsOSError, O_APPEND, O_CREAT, O_EXCL,
+                        O_RDONLY, O_RDWR, O_TRUNC, O_WRONLY)
 
 # a small simulated deployment: 3-replica RM, 4 meta nodes, 6 data nodes
 cluster = CfsCluster(n_meta=4, n_data=6, extent_max_size=1024 * 1024)
 cluster.create_volume("vol1", n_meta_partitions=3, n_data_partitions=8)
 
 # two containers mount the same volume
-m1 = cluster.mount("vol1")
-m2 = cluster.mount("vol1")
+v1 = cluster.mount("vol1").vfs
+v2 = cluster.mount("vol1").vfs
 
 # small file -> aggregated extent; large file -> dedicated extents
-m1.write_file("/config.json", b'{"replicas": 3}')
-m1.mkdir("/logs")
-m1.write_file("/logs/app.log", b"line\n" * 100_000)   # ~600 KB, large path
+fd = v1.open("/config.json", O_WRONLY | O_CREAT | O_TRUNC)
+v1.pwrite(fd, b'{"replicas": 3}', 0)
+v1.close(fd)
 
-print("m2 sees:", m2.readdir("/"))
-print("config:", m2.read_file("/config.json").decode())
-print("log size:", m2.stat("/logs/app.log")["size"])
+v1.mkdir("/logs")
+fd = v1.open("/logs/app.log", O_WRONLY | O_CREAT)
+v1.pwrite(fd, b"line\n" * 100_000, 0)          # ~600 KB, large-file path
+v1.close(fd)
 
-# in-place random write (raft path), append (primary-backup path)
-f = m2.open("/logs/app.log", "r+")
-f.seek(0)
-f.write(b"HEAD\n")
-f.close()
-assert m1.read_file("/logs/app.log")[:5] == b"HEAD\n"
+print("v2 sees:", v2.readdir("/"))
+fd = v2.open("/config.json", O_RDONLY)
+print("config:", v2.read(fd, -1).decode())
+v2.close(fd)
+print("log size:", v2.stat("/logs/app.log")["size"])
 
-# utilization report + partition view
+# errno semantics: O_EXCL on an existing file is EEXIST, like open(2)
+try:
+    v2.open("/config.json", O_WRONLY | O_CREAT | O_EXCL)
+except CfsOSError as e:
+    assert e.errno == errno.EEXIST
+    print("O_EXCL on existing file -> EEXIST, as POSIX demands")
+
+# in-place random write (raft path) via pwrite; O_APPEND for the tail
+fd = v2.open("/logs/app.log", O_RDWR)
+v2.pwrite(fd, b"HEAD\n", 0)
+v2.close(fd)
+fd = v2.open("/logs/app.log", O_WRONLY | O_APPEND)
+v2.pwrite(fd, b"TAIL\n", 0)                     # offset ignored under O_APPEND
+v2.close(fd)
+fd = v1.open("/logs/app.log", O_RDONLY)
+head = v1.pread(fd, 5, 0)
+v1.lseek(fd, v1.fstat(fd)["size"] - 5)
+tail = v1.read(fd, 5)
+v1.close(fd)
+assert (head, tail) == (b"HEAD\n", b"TAIL\n")
+
+# ftruncate to an arbitrary size (extent trim + async tail punch)
+fd = v1.open("/logs/app.log", O_RDWR)
+v1.ftruncate(fd, 1024)
+v1.close(fd)
+assert v1.stat("/logs/app.log")["size"] == 1024
+
+# volume-level statvfs + partition view (file counts arrive via heartbeats)
+cluster.tick(1)
+sf = v1.statfs()
+print(f"statfs: {sf['f_files']} files, "
+      f"{sf['f_bfree'] * sf['f_bsize'] // (1 << 20)} MiB free")
 view = cluster.rm.client_view("vol1")
 print(f"meta partitions: {[(p['pid'], p['start'], p['end']) for p in view['meta']]}")
 print(f"data partitions: {len(view['data'])}")
+
+# batched metadata RPCs: every create above was ONE round-trip
+st = v1.client.stats
+print(f"meta calls: {st['meta_calls']}, "
+      f"round-trips saved by coalescing: {st['meta_saved_roundtrips']}")
 
 # capacity expansion: nothing rebalances
 used_before = {n: d.disk.used for n, d in cluster.data_nodes.items()}

@@ -2,18 +2,23 @@
 
 Public surface:
     CfsCluster  — assemble a simulated deployment (RM + meta + data nodes)
-    CfsMount    — per-client relaxed-POSIX facade
-    CfsClient   — lower-level client (caches, workflows, file I/O)
+    CfsVfs      — POSIX-style VFS (fds, open flags, errno errors)
+    CfsMount    — legacy path/string-mode compat wrapper over the VFS
+    CfsClient   — lower-level client (caches, workflows, batched meta RPCs)
 """
 
 from .client import CfsClient, CfsFile, FsError, NotFound, Exists
 from .fs import CfsCluster, CfsMount
 from .simnet import LatencyModel, Network, SimClock
 from .types import PACKET_SIZE, SMALL_FILE_THRESHOLD
+from .vfs import (CfsOSError, CfsVfs, O_ACCMODE, O_APPEND, O_CREAT, O_EXCL,
+                  O_RDONLY, O_RDWR, O_TRUNC, O_WRONLY)
 
 __all__ = [
-    "CfsCluster", "CfsMount", "CfsClient", "CfsFile",
+    "CfsCluster", "CfsMount", "CfsClient", "CfsFile", "CfsVfs", "CfsOSError",
     "FsError", "NotFound", "Exists",
+    "O_RDONLY", "O_WRONLY", "O_RDWR", "O_ACCMODE",
+    "O_CREAT", "O_EXCL", "O_TRUNC", "O_APPEND",
     "LatencyModel", "Network", "SimClock",
     "PACKET_SIZE", "SMALL_FILE_THRESHOLD",
 ]

@@ -85,7 +85,7 @@ class CfsClient:
 
     def __init__(self, client_id: str, net: Network, rm: Any,
                  meta_nodes: Dict[str, Any], data_nodes: Dict[str, Any],
-                 volume: str, rng_seed: int = 0):
+                 volume: str, rng_seed: int = 0, coalesce_meta: bool = True):
         self.client_id = client_id
         self.net = net
         self.rm = rm
@@ -94,6 +94,10 @@ class CfsClient:
         self.volume = volume
         self.rng = random.Random(rng_seed)
         self._seq = 0
+        # coalesce colocated metadata mutations into one partition round-trip
+        # (λFS/AsyncFS-style batched RPCs); off = the scatter path the paper's
+        # Fig. 3 workflows describe step by step
+        self.coalesce_meta = coalesce_meta
         # ---- caches (§2.4) ----
         self.meta_partitions: List[_MetaPartition] = []
         self.data_partitions: List[_DataPartition] = []
@@ -102,7 +106,8 @@ class CfsClient:
         self.inode_cache: Dict[int, Dict] = {}
         self.orphan_inodes: List[int] = []           # local orphan list (§2.6)
         self.stats = {"rm_calls": 0, "meta_calls": 0, "data_calls": 0,
-                      "cache_hits": 0, "retries": 0}
+                      "cache_hits": 0, "retries": 0,
+                      "meta_batched_ops": 0, "meta_saved_roundtrips": 0}
         self.sync_partitions()
 
     # ------------------------------------------------------------------ RM
@@ -243,6 +248,39 @@ class CfsClient:
                 continue
         raise last_err
 
+    # ----------------------------------------------------- batched meta RPCs
+    def _batch_propose(self, mp: _MetaPartition, subs: List[Tuple]) -> List[Any]:
+        """ONE round-trip applying ``subs`` atomically on one partition."""
+        if len(subs) == 1:
+            return [self._meta_propose(mp, subs[0])]
+        res = self._meta_propose(mp, ("batch", list(subs)))
+        self.stats["meta_batched_ops"] += len(subs)
+        self.stats["meta_saved_roundtrips"] += len(subs) - 1
+        return res
+
+    def meta_batch(self, ops: List[Tuple[int, Tuple]]) -> List[Any]:
+        """Batched metadata mutations: ``ops`` is [(route_inode, payload)].
+
+        Ops routed to the SAME partition coalesce into one raft round-trip
+        (applied atomically, in order); ops for different partitions are
+        pipelined back-to-back, one round-trip per partition.  Results come
+        back in input order."""
+        groups: Dict[int, Tuple[_MetaPartition, List[int], List[Tuple]]] = {}
+        order: List[int] = []
+        for i, (route_ino, payload) in enumerate(ops):
+            mp = self._mp_for_inode(route_ino)
+            if mp.pid not in groups:
+                groups[mp.pid] = (mp, [], [])
+                order.append(mp.pid)
+            groups[mp.pid][1].append(i)
+            groups[mp.pid][2].append(payload)
+        results: List[Any] = [None] * len(ops)
+        for pid in order:
+            mp, idxs, subs = groups[pid]
+            for i, res in zip(idxs, self._batch_propose(mp, subs)):
+                results[i] = res
+        return results
+
     # ============================================================ metadata ops
     def create_inode(self, itype: int = InodeType.FILE,
                      link_target: bytes = b"") -> Dict:
@@ -281,8 +319,40 @@ class CfsClient:
 
     def create(self, parent: int, name: str,
                itype: int = InodeType.FILE, link_target: bytes = b"") -> Dict:
-        """Create-file workflow (Fig. 3 'create'): inode, then dentry; on
-        dentry failure unlink the inode and push it to the orphan list."""
+        """Create-file workflow.
+
+        Fast path (``coalesce_meta``): the dentry must live on the parent's
+        partition, so when that partition can also allocate the inode, the
+        whole create — inode + dentry (+ parent nlink for a subdirectory) —
+        is ONE batched round-trip applied atomically.  No orphan window.
+
+        Fallback = the paper's Fig. 3 scatter workflow: inode on a random
+        writable partition, then the dentry; on dentry failure unlink the
+        inode and push it to the orphan list."""
+        if self.coalesce_meta:
+            mp = self._mp_for_inode(parent)
+            if mp.status == "rw":
+                subs: List[Tuple] = [
+                    ("create_inode", itype, link_target, 0.0),
+                    ("create_dentry", parent, name, ("ref", 0, "inode"),
+                     itype),
+                ]
+                if itype == InodeType.DIR:
+                    subs.append(("link_inc", parent))
+                try:
+                    res = self._batch_propose(mp, subs)
+                except DentryExists:
+                    raise Exists(f"{parent}/{name}")
+                except (PartitionFull, RangeExhausted):
+                    res = None      # partition can't allocate; scatter below
+                if res is not None:
+                    inode = res[0]
+                    ino = inode["inode"]
+                    self.inode_cache[ino] = inode
+                    self.dentry_cache[(parent, name)] = {
+                        "parent": parent, "name": name, "inode": ino,
+                        "type": itype}
+                    return inode
         inode = self.create_inode(itype, link_target)
         ino = inode["inode"]
         try:
@@ -347,6 +417,117 @@ class CfsClient:
             self.orphan_inodes.append(ino)
         self.inode_cache.pop(ino, None)
         return ino
+
+    def remove(self, parent: int, name: str, ino: int,
+               dec_parent_link: bool = False) -> Optional[Dict]:
+        """Coalesced remove for a caller that already resolved ``name`` to
+        ``ino`` (the VFS always has): dentry delete, nlink decrement, the
+        eviction of a now-orphan inode, and (for rmdir) the parent's ".."
+        decrement collapse into as few partition round-trips as possible —
+        ONE when inode and dentry colocate.  Falls back to the scatter
+        workflow when coalescing is off.  Returns the evict result (with the
+        extent keys to free) if the inode was reclaimed, else None."""
+        if not self.coalesce_meta:
+            self.unlink(parent, name)
+            if dec_parent_link:
+                mp = self._mp_for_inode(parent)
+                self._meta_propose(mp, ("unlink_dec", parent))
+            self.evict_orphans()
+            return None
+        mp_p = self._mp_for_inode(parent)
+        mp_i = self._mp_for_inode(ino)
+        colocated = mp_i.pid == mp_p.pid
+        subs: List[Tuple] = [("delete_dentry", parent, name)]
+        if colocated:
+            subs.append(("unlink_dec", ino))
+            subs.append(("evict", ino))
+        if dec_parent_link:
+            subs.append(("unlink_dec", parent))
+        try:
+            res = self._batch_propose(mp_p, subs)
+        except NoSuchDentry:
+            raise NotFound(f"{parent}/{name}")
+        except NoSuchInode:
+            # invariant says this can't happen for a live dentry, but a lost
+            # inode must not wedge the namespace: scatter path cleans up
+            self.unlink(parent, name)
+            if dec_parent_link:
+                self._meta_propose(mp_p, ("unlink_dec", parent))
+            self.evict_orphans()
+            return None
+        self.dentry_cache.pop((parent, name), None)
+        self.inode_cache.pop(ino, None)
+        evict_res: Optional[Dict] = None
+        if colocated:
+            evict_res = res[2]
+        else:
+            # inode lives elsewhere: one more (batched) round-trip there
+            try:
+                dec, evict_res = self._batch_propose(
+                    mp_i, [("unlink_dec", ino), ("evict", ino)])
+            except Exception:
+                self.orphan_inodes.append(ino)
+                return None
+        if evict_res and evict_res.get("ok"):
+            self._free_extents(evict_res["extents"], evict_res["size"])
+            return evict_res
+        return None
+
+    def rename_entry(self, src_parent: int, src_name: str,
+                     dst_parent: int, dst_name: str,
+                     ino: int, itype: int) -> None:
+        """rename(2): move the dentry; the moved inode's nlink ends where it
+        started.
+
+        When both parents colocate, the whole move is one atomic batch and
+        the inode is never touched.  Across partitions the two dentry ops
+        are separate round-trips, so the nlink is BRACKETED (inc before the
+        copy, dec after the delete): at every intermediate step nlink still
+        equals the number of referencing dentries, and a crash between the
+        round-trips leaves an alias, never an undercounted inode whose
+        eviction would dangle the surviving dentry.  (The seed's link+unlink
+        spelling did this too, but flagged a directory MARK_DELETED at its
+        live floor of 2 — fixed in ``_ap_unlink_dec``.)  Directory ".."
+        accounting moves between the two parents when they differ."""
+        cross_dir = dst_parent != src_parent
+        mp_src = self._mp_for_inode(src_parent)
+        mp_dst = self._mp_for_inode(dst_parent)
+        if self.coalesce_meta and mp_src.pid == mp_dst.pid:
+            subs: List[Tuple] = [
+                ("create_dentry", dst_parent, dst_name, ino, itype)]
+            if itype == InodeType.DIR and cross_dir:
+                subs.append(("link_inc", dst_parent))
+            subs.append(("delete_dentry", src_parent, src_name))
+            if itype == InodeType.DIR and cross_dir:
+                subs.append(("unlink_dec", src_parent))
+            try:
+                self._batch_propose(mp_src, subs)
+            except DentryExists:
+                raise Exists(f"{dst_parent}/{dst_name}")
+            except NoSuchDentry:
+                raise NotFound(f"{src_parent}/{src_name}")
+        else:
+            mp_i = self._mp_for_inode(ino)
+            self._meta_propose(mp_i, ("link_inc", ino))
+            try:
+                self._create_dentry(dst_parent, dst_name, ino, itype)
+                if itype == InodeType.DIR and cross_dir:
+                    self._meta_propose(mp_dst, ("link_inc", dst_parent))
+            except Exception:
+                self._meta_propose(mp_i, ("unlink_dec", ino))
+                raise
+            try:
+                self._meta_propose(
+                    mp_src, ("delete_dentry", src_parent, src_name))
+            except NoSuchDentry:
+                raise NotFound(f"{src_parent}/{src_name}")
+            if itype == InodeType.DIR and cross_dir:
+                self._meta_propose(mp_src, ("unlink_dec", src_parent))
+            self._meta_propose(mp_i, ("unlink_dec", ino))
+        self.dentry_cache.pop((src_parent, src_name), None)
+        self.dentry_cache[(dst_parent, dst_name)] = {
+            "parent": dst_parent, "name": dst_name, "inode": ino,
+            "type": itype}
 
     def evict_orphans(self) -> int:
         """Send evict for locally tracked orphans; free their data (async)."""
@@ -560,11 +741,13 @@ class CfsClient:
 
     def read_extents(self, inode: Dict, offset: int, size: int) -> bytes:
         """Read [offset, offset+size) of a file: map to extent keys, fetch
-        from each partition's leader (leader cache, walk replicas on miss)."""
+        from each partition's leader (leader cache, walk replicas on miss).
+        Byte ranges no extent covers — holes from ftruncate-grow or sparse
+        writes — read back as zeros."""
         size = min(size, inode["size"] - offset)
         if size <= 0:
             return b""
-        out = bytearray()
+        out = bytearray(size)
         need_lo, need_hi = offset, offset + size
         for (pid, eid, foff, eoff, esize) in inode["extents"]:
             seg_lo, seg_hi = foff, foff + esize
@@ -573,8 +756,24 @@ class CfsClient:
                 continue
             dp = self._dp(pid)
             chunk = self._read_one(dp, eid, eoff + (lo - seg_lo), hi - lo)
-            out.extend(chunk)
+            out[lo - need_lo : lo - need_lo + len(chunk)] = chunk
         return bytes(out)
+
+    def _punch_range(self, pid: int, eid: int, eoff: int, length: int) -> None:
+        """Free [eoff, eoff+length) of one extent on every replica — the
+        ftruncate tail-punch (same async fallocate path as small-file
+        deletes, §2.7.3)."""
+        try:
+            dp = self._dp(pid)
+        except NotFound:
+            return
+        for nid in dp.replicas:
+            try:
+                self.net.call(self.client_id, nid,
+                              self.data_nodes[nid].serve_punch_hole,
+                              pid, eid, eoff, length, kind="client.data")
+            except NetError:
+                continue
 
     def _read_one(self, dp: _DataPartition, eid: int, eoff: int,
                   size: int) -> bytes:
@@ -594,6 +793,22 @@ class CfsClient:
                 last_err = e
                 continue
         raise last_err
+
+
+def _uncovered(lo: int, hi: int,
+               covered: List[Tuple[int, int]]) -> List[Tuple[int, int]]:
+    """Subranges of [lo, hi) not covered by any interval in ``covered``."""
+    out: List[Tuple[int, int]] = []
+    pos = lo
+    for c_lo, c_hi in sorted(covered):
+        if c_lo > pos:
+            out.append((pos, min(c_lo, hi)))
+        pos = max(pos, c_hi)
+        if pos >= hi:
+            break
+    if pos < hi:
+        out.append((pos, hi))
+    return out
 
 
 class CfsFile:
@@ -665,8 +880,11 @@ class CfsFile:
 
     def _overwrite_range(self, file_off: int, data: bytes) -> None:
         """In-place overwrite: 'the offset of the file on the data partition
-        does not change' — route each covered extent-piece to its raft group."""
-        pos = 0
+        does not change' — route each covered extent-piece to its raft group.
+        Ranges below EOF that NO extent covers (holes left by ftruncate-grow
+        or trimmed tails) get fresh extents instead: an overwrite must never
+        silently drop bytes into a hole."""
+        covered: List[Tuple[int, int]] = []
         for k in self._extents:
             seg_lo, seg_hi = k.file_offset, k.file_offset + k.size
             lo = max(file_off, seg_lo)
@@ -679,7 +897,15 @@ class CfsFile:
                 dp, "serve_overwrite", k.extent_id,
                 k.extent_offset + (lo - seg_lo), piece,
                 nbytes=len(piece) + 128)
-            pos += len(piece)
+            covered.append((lo, hi))
+        for lo, hi in _uncovered(file_off, file_off + len(data), covered):
+            keys, _ = self.client._append_packets(
+                data[lo - file_off : hi - file_off])
+            foff = lo
+            for k in keys:
+                k.file_offset = foff
+                foff += k.size
+            self._extents.extend(keys)
 
     # ---- read ------------------------------------------------------------------
     def read(self, size: int = -1) -> bytes:
@@ -695,19 +921,52 @@ class CfsFile:
     def seek(self, pos: int) -> None:
         self.pos = pos
 
-    def truncate(self) -> None:
-        """O_TRUNC: drop all content (mode "w" on an existing file).  Old
-        extents are freed asynchronously like any delete (§2.7.3)."""
-        if self._extents:
-            self.client._free_extents([k.as_tuple() for k in self._extents],
-                                      self._size)
-        self._extents = []
-        self._size = 0
-        self._buf_start = 0
+    def truncate(self, size: int = 0) -> None:
+        """ftruncate(fd, size): shrink trims extent keys and punches the
+        freed ranges out of their extents (async, §2.7.3); grow leaves a
+        hole that reads back as zeros.  Buffered appends are flushed FIRST so
+        the trim operates on the real extent map — the in-flight buffer used
+        to be dropped silently, which corrupted truncate-to-nonzero."""
+        if size == 0:
+            # everything goes — no point making the buffer durable first
+            if self._extents:
+                self.client._free_extents(
+                    [k.as_tuple() for k in self._extents], self._size)
+            self._extents = []
+            self._stream_state = None
+            self._size = 0
+            self._buf_start = 0
+            self._buf.clear()
+            self._dirty = True
+            return
+        self.flush()
+        if size < self._size:
+            kept: List[ExtentKey] = []
+            dropped: List[ExtentKey] = []
+            for k in self._extents:
+                if k.file_offset >= size:
+                    dropped.append(k)
+                elif k.file_offset + k.size > size:
+                    # piece straddles the cut: keep the head, punch the tail
+                    trim = k.file_offset + k.size - size
+                    self.client._punch_range(
+                        k.partition_id, k.extent_id,
+                        k.extent_offset + (k.size - trim), trim)
+                    k.size -= trim
+                    kept.append(k)
+                else:
+                    kept.append(k)
+            # pieces are ≤128 KB packets that may share an extent with kept
+            # pieces, so freeing is per-range (punch), never whole-extent
+            for k in dropped:
+                self.client._punch_range(k.partition_id, k.extent_id,
+                                         k.extent_offset, k.size)
+            self._extents = kept
+            self._stream_state = None       # next append opens a fresh extent
+        self._size = size
+        self._buf_start = self._size        # appends buffer from the new EOF
         self._buf.clear()
-        self._stream_state = None
-        self.pos = 0
-        self._dirty = True
+        self._dirty = True                  # POSIX: the fd offset is NOT moved
 
     # ---- flush / fsync / close ----------------------------------------------------
     def flush(self) -> None:
@@ -729,8 +988,8 @@ class CfsFile:
         """fsync(): flush data AND synchronize the meta node (§2.7.1)."""
         self.flush()
         if self._dirty:
-            self.client.update_extents(self.inode["inode"], self._size,
-                                       self._extents)
+            self.inode = self.client.update_extents(
+                self.inode["inode"], self._size, self._extents)
             self._dirty = False
 
     def close(self) -> None:

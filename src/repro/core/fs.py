@@ -12,8 +12,9 @@ cross-client write atomicity for overlapping ranges.
 
 from __future__ import annotations
 
-import posixpath
-from typing import Any, Dict, List, Optional, Tuple
+import errno
+from contextlib import contextmanager
+from typing import Any, Dict, List, Optional
 
 from .client import (CfsClient, CfsFile, DirNotEmpty, Exists, FsError,
                      IsADirectory, NotADirectory, NotFound)
@@ -23,6 +24,8 @@ from .multiraft import RaftCluster
 from .resource_manager import ResourceManager
 from .simnet import LatencyModel, Network
 from .types import ROOT_INODE, InodeType
+from .vfs import (CfsOSError, CfsVfs, O_APPEND, O_CREAT, O_EXCL, O_RDONLY,
+                  O_RDWR, O_TRUNC, O_WRONLY)
 
 __all__ = ["CfsCluster", "CfsMount"]
 
@@ -151,68 +154,70 @@ class CfsCluster:
             rep.recover_from_leader(leader_rep)
 
 
+_LEGACY_EXC = {
+    errno.ENOENT: NotFound,
+    errno.EEXIST: Exists,
+    errno.ENOTDIR: NotADirectory,
+    errno.EISDIR: IsADirectory,
+    errno.ENOTEMPTY: DirNotEmpty,
+}
+
+
+def _mode_to_flags(mode: str) -> int:
+    """Legacy string modes -> open(2) flags."""
+    flags = 0
+    if "w" in mode:
+        flags = O_WRONLY | O_CREAT | O_TRUNC
+    elif "a" in mode:
+        flags = O_WRONLY | O_CREAT | O_APPEND
+    elif mode.startswith("r"):
+        flags = O_RDONLY
+    else:
+        raise FsError(f"bad mode {mode!r}")
+    if "+" in mode or "w" in mode or "a" in mode:
+        flags = (flags & ~0o3) | O_RDWR
+    return flags
+
+
 class CfsMount:
-    """Path-level relaxed-POSIX facade over a CfsClient."""
+    """Legacy path/string-mode facade — a thin compat wrapper over
+    :class:`~repro.core.vfs.CfsVfs`.
+
+    All semantics live in the VFS layer now; this class only translates
+    string modes to flags and ``CfsOSError`` back to the historical
+    exception classes.  New code should use ``mount.vfs`` directly."""
 
     def __init__(self, client: CfsClient):
         self.client = client
+        self.vfs = CfsVfs(client)
+
+    @contextmanager
+    def _errs(self):
+        try:
+            yield
+        except CfsOSError as e:
+            legacy = _LEGACY_EXC.get(e.errno, FsError)
+            raise legacy(e.path or str(e)) from None
 
     # ---- path resolution -------------------------------------------------------
-    def _resolve(self, path: str, parent_only: bool = False
-                 ) -> Tuple[int, str, Optional[Dict]]:
-        """Returns (parent_ino, leaf_name, dentry|None)."""
-        path = posixpath.normpath(path)
-        if not path.startswith("/"):
-            raise FsError(f"path must be absolute: {path}")
-        if path == "/":
-            return (0, "/", {"parent": 0, "name": "/", "inode": ROOT_INODE,
-                             "type": InodeType.DIR})
-        parts = [p for p in path.split("/") if p]
-        parent = ROOT_INODE
-        for comp in parts[:-1]:
-            d = self.client.lookup(parent, comp)
-            if d["type"] != InodeType.DIR:
-                raise NotADirectory(comp)
-            parent = d["inode"]
-        leaf = parts[-1]
-        if parent_only:
-            return (parent, leaf, None)
-        try:
-            # the leaf lookup is authoritative (a stale dentry cache entry
-            # must not resurrect a file another client unlinked); directory
-            # components above used the cache
-            dentry = self.client.lookup(parent, leaf, use_cache=False)
-        except NotFound:
-            dentry = None
-        return (parent, leaf, dentry)
+    def _resolve(self, path: str, parent_only: bool = False):
+        """(parent_ino, leaf, dentry|None) — kept for layers (storage/) that
+        reached into the resolver; resolution itself lives in the VFS."""
+        with self._errs():
+            return self.vfs._resolve(path, parent_only=parent_only)
 
     def path_inode(self, path: str) -> int:
-        _, _, d = self._resolve(path)
-        if d is None:
-            raise NotFound(path)
-        return d["inode"]
+        with self._errs():
+            return self.vfs.path_inode(path)
 
     # ---- file ops ------------------------------------------------------------------
     def create(self, path: str) -> CfsFile:
-        parent, leaf, dentry = self._resolve(path)
-        if dentry is not None:
-            raise Exists(path)
-        inode = self.client.create(parent, leaf, InodeType.FILE)
-        return CfsFile(self.client, inode, "w")
+        with self._errs():
+            return self.vfs.open_file(path, O_RDWR | O_CREAT | O_EXCL)
 
     def open(self, path: str, mode: str = "r") -> CfsFile:
-        parent, leaf, dentry = self._resolve(path)
-        if dentry is None:
-            if "w" in mode or "a" in mode:
-                inode = self.client.create(parent, leaf, InodeType.FILE)
-                return CfsFile(self.client, inode, mode)
-            raise NotFound(path)
-        if dentry["type"] == InodeType.DIR:
-            raise IsADirectory(path)
-        f = self.client.open(dentry["inode"], mode)
-        if mode.startswith("w"):      # POSIX O_TRUNC semantics
-            f.truncate()
-        return f
+        with self._errs():
+            return self.vfs.open_file(path, _mode_to_flags(mode))
 
     def write_file(self, path: str, data: bytes) -> None:
         f = self.open(path, "w")
@@ -224,87 +229,49 @@ class CfsMount:
         return f.read()
 
     def unlink(self, path: str) -> None:
-        parent, leaf, dentry = self._resolve(path)
-        if dentry is None:
-            raise NotFound(path)
-        if dentry["type"] == InodeType.DIR:
-            raise IsADirectory(path)
-        self.client.unlink(parent, leaf)
-        self.client.evict_orphans()
+        with self._errs():
+            self.vfs.unlink(path)
 
     def link(self, src: str, dst: str) -> None:
-        src_ino = self.path_inode(src)
-        parent, leaf, dentry = self._resolve(dst)
-        if dentry is not None:
-            raise Exists(dst)
-        self.client.link(src_ino, parent, leaf)
+        with self._errs():
+            self.vfs.link(src, dst)
 
     def symlink(self, target: str, linkpath: str) -> None:
-        parent, leaf, dentry = self._resolve(linkpath)
-        if dentry is not None:
-            raise Exists(linkpath)
-        self.client.create(parent, leaf, InodeType.SYMLINK,
-                           link_target=target.encode())
+        with self._errs():
+            self.vfs.symlink(target, linkpath)
 
     def readlink(self, path: str) -> str:
-        ino = self.path_inode(path)
-        inode = self.client.get_inode(ino)
-        if inode["type"] != InodeType.SYMLINK:
-            raise FsError(f"not a symlink: {path}")
-        return inode["link_target"].decode()
+        with self._errs():
+            return self.vfs.readlink(path)
 
     def rename(self, src: str, dst: str) -> None:
-        """link(dst -> inode) then unlink(src) — not atomic across partitions,
-        matching the paper's relaxed metadata atomicity."""
-        src_parent, src_leaf, src_dentry = self._resolve(src)
-        if src_dentry is None:
-            raise NotFound(src)
-        dst_parent, dst_leaf, dst_dentry = self._resolve(dst)
-        if dst_dentry is not None:
-            raise Exists(dst)
-        self.client.link(src_dentry["inode"], dst_parent, dst_leaf)
-        self.client.unlink(src_parent, src_leaf)
+        with self._errs():
+            self.vfs.rename(src, dst)
 
     # ---- directory ops -----------------------------------------------------------------
     def mkdir(self, path: str) -> int:
-        parent, leaf, dentry = self._resolve(path)
-        if dentry is not None:
-            raise Exists(path)
-        inode = self.client.create(parent, leaf, InodeType.DIR)
-        return inode["inode"]
+        with self._errs():
+            return self.vfs.mkdir(path)
 
     def rmdir(self, path: str) -> None:
-        parent, leaf, dentry = self._resolve(path)
-        if dentry is None:
-            raise NotFound(path)
-        if dentry["type"] != InodeType.DIR:
-            raise NotADirectory(path)
-        if self.client.readdir(dentry["inode"]):
-            raise DirNotEmpty(path)
-        self.client.unlink(parent, leaf)
-        # the removed dir no longer contributes ".." to its parent
-        mp = self.client._mp_for_inode(parent)
-        self.client._meta_propose(mp, ("unlink_dec", parent))
-        self.client.evict_orphans()
+        with self._errs():
+            self.vfs.rmdir(path)
 
     def readdir(self, path: str) -> List[str]:
-        ino = self.path_inode(path)
-        return [d["name"] for d in self.client.readdir(ino)]
+        with self._errs():
+            return self.vfs.readdir(path)
 
     def dir_stat(self, path: str) -> List[Dict]:
         """readdir + attrs — the mdtest DirStat operation (batchInodeGet)."""
-        ino = self.path_inode(path)
-        return self.client.readdir_plus(ino)
+        with self._errs():
+            return self.vfs.readdir_plus(path)
 
     def stat(self, path: str) -> Dict:
-        return self.client.get_inode(self.path_inode(path))
+        with self._errs():
+            return self.vfs.stat(path)
 
     def exists(self, path: str) -> bool:
-        try:
-            self.path_inode(path)
-            return True
-        except (NotFound, NotADirectory):
-            return False
+        return self.vfs.exists(path)
 
     # ---- maintenance ---------------------------------------------------------------------
     def evict_orphans(self) -> int:

@@ -125,14 +125,17 @@ class MetaPartitionSM(StateMachine):
         return _inode_view(inode)
 
     def _ap_unlink_dec(self, ino: int) -> Dict:
-        """Decrease nlink; at the threshold (0 file / 2 dir) mark deleted."""
+        """Decrease nlink; mark deleted when the object is actually dead:
+        files at nlink 0, directories BELOW 2 — an empty live dir sits at
+        exactly 2 ("." + its parent entry), so a parent losing one subdir
+        (3 -> 2) must stay NORMAL or fsck would evict a live directory."""
         inode = self._inode(ino)
         inode.nlink = max(0, inode.nlink - 1)
         inode.gen += 1
-        thresh = 2 if inode.type == InodeType.DIR else 0
-        if inode.nlink <= thresh and inode.type != InodeType.DIR:
-            inode.flag = InodeFlag.MARK_DELETED
-        if inode.type == InodeType.DIR and inode.nlink <= 2:
+        if inode.type == InodeType.DIR:
+            if inode.nlink <= 1:
+                inode.flag = InodeFlag.MARK_DELETED
+        elif inode.nlink <= 0:
             inode.flag = InodeFlag.MARK_DELETED
         return _inode_view(inode)
 
@@ -191,6 +194,61 @@ class MetaPartitionSM(StateMachine):
         """Algorithm 1 step: cut off the inode range at ``end``."""
         self.end = end
         return end
+
+    # -- batched mutations (λFS/AsyncFS-style coalescing) ----------------------
+    #
+    # One raft entry applies a whole list of sub-ops atomically.  Failure
+    # modes of every batchable op are PRECONDITION failures (missing inode,
+    # existing dentry, full partition), so a validation pass up front makes
+    # the apply phase infallible — all-or-nothing without an undo log, and
+    # deterministic across replicas.
+    #
+    # A sub-op argument of the form ``("ref", i, field)`` refers to field
+    # ``field`` of the i-th sub-op's result, so e.g. a dentry can point at
+    # the inode allocated earlier in the same batch.
+
+    BATCHABLE = {"create_inode", "create_dentry", "delete_dentry",
+                 "link_inc", "unlink_dec", "evict", "update_extents"}
+
+    def _ap_batch(self, subs: List[Tuple]) -> List[Any]:
+        # Validation must be EXACT w.r.t. the apply-phase checks, which is
+        # why create_inode is restricted to one, in first position: its
+        # writable() check then sees the same state at validation and apply.
+        # Sub-ops must also not consume state an earlier sub-op destroys
+        # (enforced for the delete/evict shapes our client emits).
+        deleted_keys = set()
+        for i, sub in enumerate(subs):
+            op, args = sub[0], sub[1:]
+            if op not in self.BATCHABLE:
+                raise MetaError(f"op {op!r} is not batchable")
+            if op == "create_inode":
+                if i != 0:
+                    raise MetaError(
+                        "create_inode must be the first sub-op of a batch")
+                if not self.writable():
+                    if self.cursor >= self.end:
+                        raise RangeExhausted(str(self.partition_id))
+                    raise PartitionFull(str(self.partition_id))
+            elif op == "create_dentry":
+                parent, name, ino, _dtype = args
+                existing = self.dentry_tree.get((parent, name))
+                if existing is not None and existing.inode != ino:
+                    raise DentryExists(f"{parent}/{name}")
+            elif op == "delete_dentry":
+                parent, name = args
+                if ((parent, name) in deleted_keys
+                        or self.dentry_tree.get((parent, name)) is None):
+                    raise NoSuchDentry(f"{parent}/{name}")
+                deleted_keys.add((parent, name))
+            elif op in ("link_inc", "unlink_dec", "update_extents"):
+                ino = args[0]
+                if isinstance(ino, int):
+                    self._inode(ino)            # raises NoSuchInode
+            # "evict" never raises — it reports {"ok": False} instead
+        results: List[Any] = []
+        for sub in subs:
+            results.append(self.apply(_resolve_refs(sub, results)))
+        return results
 
     # ---- reads (leader-local, not proposed) ------------------------------------
     def _inode(self, ino: int) -> Inode:
@@ -259,6 +317,17 @@ class MetaPartitionSM(StateMachine):
                 ctime=ct, mtime=mt, gen=gen))
         for (p, n, i, t) in snap["dentries"]:
             self.dentry_tree.put((p, n), Dentry(p, n, i, t))
+
+
+def _resolve_refs(sub: Tuple, results: List[Any]) -> Tuple:
+    """Replace ("ref", i, field) argument tokens with results[i][field]."""
+    out = []
+    for arg in sub:
+        if (isinstance(arg, tuple) and len(arg) == 3 and arg[0] == "ref"):
+            out.append(results[arg[1]][arg[2]])
+        else:
+            out.append(arg)
+    return tuple(out)
 
 
 def _inode_view(i: Inode) -> Dict:
@@ -342,6 +411,7 @@ class MetaNode:
             "partitions": {
                 pid: {
                     "entries": p.entries,
+                    "inodes": len(p.inode_tree),
                     "max_entries": p.max_entries,
                     "max_inode_id": p.max_inode_id,
                     "end": p.end,

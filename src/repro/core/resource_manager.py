@@ -270,6 +270,31 @@ class ResourceManager:
                          "status": p.status})
         return {"meta": meta, "data": data}
 
+    def statfs(self, volume: str) -> Dict[str, int]:
+        """Volume-level statvfs: capacity from the registered data nodes'
+        disks, file count from the meta partitions' heartbeat soft state."""
+        sm = self.leader_sm()
+        if volume not in sm.volumes:
+            raise KeyError(volume)
+        blocks = used = 0
+        for nid, info in sm.nodes.items():
+            if info["kind"] != "data" or nid not in self.directory:
+                continue
+            disk = self.directory[nid].disk
+            blocks += disk.capacity
+            used += disk.used
+        files = sum(self.soft_partition_meta.get(pid, {}).get("inodes", 0)
+                    for pid in sm.volumes[volume]["meta"])
+        bsize = 4096
+        return {
+            "f_bsize": bsize,
+            "f_blocks": blocks // bsize,
+            "f_bfree": (blocks - used) // bsize,
+            "f_bavail": (blocks - used) // bsize,
+            "f_files": files,
+            "f_namemax": 255,
+        }
+
     # ---- meta partition splitting (§2.3.2, Algorithm 1) -----------------------------------
     def maybe_split_meta_partition(self, volume: str) -> Optional[int]:
         """Inspect the volume's max-id meta partition; split if near-full.

@@ -1,0 +1,481 @@
+"""POSIX-style VFS layer over a CfsClient (paper §2.7).
+
+The paper's headline API claim is "POSIX-compliant APIs with relaxed
+semantics and metadata atomicity".  This module is that surface: real open
+flags (``O_CREAT | O_EXCL | O_TRUNC | O_APPEND`` over an ``O_ACCMODE``
+access mode), a per-mount file-descriptor table handing out integer fds,
+offset-addressed ``pread``/``pwrite``, arbitrary-size ``ftruncate``, and a
+single ``CfsOSError(errno, path)`` error channel in place of the ad-hoc
+exception zoo — exactly what a FUSE lowering or an mdtest/fio harness
+expects to talk to.
+
+Relaxed semantics are unchanged from the paper: sequential consistency per
+op, no leases, no cross-client atomicity for overlapping writes.  What IS
+new underneath is the metadata round-trip shape: namespace mutations go
+through ``CfsClient.meta_batch``-style coalesced RPCs (λFS/AsyncFS-style),
+so an ``open(O_CREAT)`` that allocates inode + dentry on one partition is a
+single raft round-trip instead of two, and ``unlink`` collapses dentry
+delete + nlink decrement + eviction the same way.
+"""
+
+from __future__ import annotations
+
+import errno
+import os
+import posixpath
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from .client import (CfsClient, CfsFile, DirNotEmpty, Exists, FsError,
+                     IsADirectory, NotADirectory, NotFound)
+from .meta_node import (DentryExists, MetaError, NoSuchDentry, NoSuchInode,
+                        PartitionFull, RangeExhausted)
+from .simnet import NetError
+from .types import ROOT_INODE, InodeType
+
+__all__ = [
+    "CfsVfs", "CfsOSError",
+    "O_RDONLY", "O_WRONLY", "O_RDWR", "O_ACCMODE",
+    "O_CREAT", "O_EXCL", "O_TRUNC", "O_APPEND",
+]
+
+# Linux-valued open(2) flags (kept self-contained so a simulated client
+# never depends on the host libc's encoding).
+O_RDONLY = 0o0
+O_WRONLY = 0o1
+O_RDWR = 0o2
+O_ACCMODE = 0o3
+O_CREAT = 0o100
+O_EXCL = 0o200
+O_TRUNC = 0o1000
+O_APPEND = 0o2000
+
+
+class CfsOSError(OSError):
+    """The VFS error channel: one exception type, errno semantics.
+
+    Subclasses OSError so callers can use ``e.errno``/``errno.ENOENT``
+    comparisons exactly as they would against a kernel filesystem."""
+
+    def __init__(self, err: int, path: str = ""):
+        super().__init__(err, os.strerror(err), path or None)
+        self.path = path
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"CfsOSError(errno.{errno.errorcode.get(self.errno)}, {self.path!r})"
+
+
+# legacy CfsClient / meta-node exception -> errno (subclasses before bases)
+_ERRNO_OF = (
+    (NotFound, errno.ENOENT),
+    (Exists, errno.EEXIST),
+    (NotADirectory, errno.ENOTDIR),
+    (IsADirectory, errno.EISDIR),
+    (DirNotEmpty, errno.ENOTEMPTY),
+    (DentryExists, errno.EEXIST),
+    (NoSuchDentry, errno.ENOENT),
+    (NoSuchInode, errno.ENOENT),
+    (PartitionFull, errno.ENOSPC),
+    (RangeExhausted, errno.ENOSPC),
+    (MetaError, errno.EIO),
+)
+
+
+def _oserror(exc: Exception, path: str) -> CfsOSError:
+    for cls, code in _ERRNO_OF:
+        if isinstance(exc, cls):
+            return CfsOSError(code, path)
+    return CfsOSError(errno.EIO, path)
+
+
+@dataclass
+class _OpenFile:
+    """One fd-table slot."""
+    fd: int
+    path: str
+    flags: int
+    file: CfsFile
+
+    @property
+    def readable(self) -> bool:
+        return (self.flags & O_ACCMODE) != O_WRONLY
+
+    @property
+    def writable(self) -> bool:
+        return (self.flags & O_ACCMODE) != O_RDONLY
+
+
+class CfsVfs:
+    """Per-mount POSIX-style VFS: fd table + flag-driven opens + errno errors.
+
+    One instance per mounted volume (per CfsClient), like one kernel mount.
+    All methods raise :class:`CfsOSError`; fds are small integers starting
+    at 3 (0-2 reserved out of habit)."""
+
+    def __init__(self, client: CfsClient):
+        self.client = client
+        self._fds: Dict[int, _OpenFile] = {}
+        self._next_fd = 3
+
+    # ------------------------------------------------------- path resolution
+    def _resolve(self, path: str, parent_only: bool = False
+                 ) -> Tuple[int, str, Optional[Dict]]:
+        """Walk ``path`` from the root; returns (parent_ino, leaf, dentry).
+
+        Directory components resolve through the dentry cache; the leaf
+        lookup is authoritative (a stale cache entry must not resurrect a
+        file another client unlinked)."""
+        norm = posixpath.normpath(path)
+        if not norm.startswith("/"):
+            raise CfsOSError(errno.EINVAL, path)
+        if norm == "//":
+            norm = "/"      # POSIX: "//" is (implementation-defined) root
+        if norm == "/":
+            return (0, "/", {"parent": 0, "name": "/", "inode": ROOT_INODE,
+                             "type": InodeType.DIR})
+        parts = [p for p in norm.split("/") if p]
+        parent = ROOT_INODE
+        for comp in parts[:-1]:
+            try:
+                d = self.client.lookup(parent, comp)
+            except NotFound:
+                raise CfsOSError(errno.ENOENT, path)
+            if d["type"] != InodeType.DIR:
+                raise CfsOSError(errno.ENOTDIR, path)
+            parent = d["inode"]
+        leaf = parts[-1]
+        if parent_only:
+            return (parent, leaf, None)
+        try:
+            dentry = self.client.lookup(parent, leaf, use_cache=False)
+        except NotFound:
+            dentry = None
+        return (parent, leaf, dentry)
+
+    def path_inode(self, path: str) -> int:
+        _, _, dentry = self._resolve(path)
+        if dentry is None:
+            raise CfsOSError(errno.ENOENT, path)
+        return dentry["inode"]
+
+    # ------------------------------------------------------------- fd table
+    def _alloc_fd(self, path: str, flags: int, f: CfsFile) -> int:
+        fd = self._next_fd
+        self._next_fd += 1
+        self._fds[fd] = _OpenFile(fd, path, flags, f)
+        return fd
+
+    def _of(self, fd: int) -> _OpenFile:
+        of = self._fds.get(fd)
+        if of is None:
+            raise CfsOSError(errno.EBADF, f"fd {fd}")
+        return of
+
+    # ------------------------------------------------------------ open/close
+    def open(self, path: str, flags: int = O_RDONLY, mode: int = 0o644) -> int:
+        """open(2): returns an integer fd.  ``mode`` is accepted for POSIX
+        shape (permission bits are not modeled)."""
+        f = self.open_file(path, flags)
+        if flags & O_APPEND:
+            # POSIX: O_APPEND pins WRITES to EOF (write/pwrite re-seek there)
+            # but the initial offset for reads is 0
+            f.seek(0)
+        return self._alloc_fd(path, flags, f)
+
+    def open_file(self, path: str, flags: int = O_RDONLY) -> CfsFile:
+        """The open workflow without fd bookkeeping — the compat mount uses
+        this to hand out raw CfsFile handles."""
+        if posixpath.normpath(path) == "/":
+            raise CfsOSError(errno.EISDIR, path)
+        # with O_CREAT (and batching on) the up-front existence lookup is
+        # skipped — create-first resolves only the parent chain and lets the
+        # create RPC detect EEXIST atomically; in scatter mode a failed
+        # create costs three RPCs and an orphan, so resolve the leaf instead
+        create_first = bool(flags & O_CREAT) and self.client.coalesce_meta
+        parent, leaf, dentry = self._resolve(path, parent_only=create_first)
+        accmode = flags & O_ACCMODE
+        fmode = "r" if accmode == O_RDONLY else (
+            "a" if flags & O_APPEND else "r+")
+        if flags & O_CREAT and dentry is None:
+            # create-first: ONE coalesced round-trip when the file is new
+            # (the common case for O_CREAT); fall back to open-existing on
+            # EEXIST instead of paying an up-front existence lookup
+            try:
+                inode = self.client.create(parent, leaf, InodeType.FILE)
+                return CfsFile(self.client, inode, fmode)
+            except Exists:
+                if flags & O_EXCL:
+                    raise CfsOSError(errno.EEXIST, path)
+                try:
+                    dentry = self.client.lookup(parent, leaf, use_cache=False)
+                except NotFound:
+                    raise CfsOSError(errno.ENOENT, path)
+            except (FsError, MetaError) as e:
+                raise _oserror(e, path)
+        elif flags & O_CREAT and flags & O_EXCL:
+            # scatter mode resolved the leaf up front: it exists
+            raise CfsOSError(errno.EEXIST, path)
+        if dentry is None:
+            raise CfsOSError(errno.ENOENT, path)
+        if dentry["type"] == InodeType.DIR:
+            raise CfsOSError(errno.EISDIR, path)
+        try:
+            f = self.client.open(dentry["inode"], fmode)
+        except (FsError, MetaError) as e:
+            raise _oserror(e, path)
+        if flags & O_TRUNC and accmode != O_RDONLY:
+            f.truncate(0)
+        return f
+
+    def close(self, fd: int) -> None:
+        of = self._of(fd)
+        try:
+            of.file.close()                     # flush + meta sync
+        except (FsError, MetaError) as e:
+            raise _oserror(e, of.path)
+        finally:
+            del self._fds[fd]
+
+    # --------------------------------------------------------------- fd I/O
+    def pread(self, fd: int, size: int, offset: int) -> bytes:
+        of = self._of(fd)
+        if not of.readable:
+            raise CfsOSError(errno.EBADF, of.path)
+        if offset < 0:
+            raise CfsOSError(errno.EINVAL, of.path)
+        f = of.file
+        saved = f.pos
+        f.seek(offset)
+        try:
+            return f.read(size)
+        finally:
+            f.seek(saved)                       # pread does not move the offset
+
+    def pwrite(self, fd: int, data: bytes, offset: int) -> int:
+        of = self._of(fd)
+        if not of.writable:
+            raise CfsOSError(errno.EBADF, of.path)
+        if offset < 0:
+            raise CfsOSError(errno.EINVAL, of.path)
+        f = of.file
+        saved = f.pos
+        if of.flags & O_APPEND:
+            f.seek(f.size)                      # O_APPEND: offset is ignored
+        else:
+            f.seek(offset)
+        try:
+            return f.write(data)
+        finally:
+            f.seek(saved)
+
+    def read(self, fd: int, size: int = -1) -> bytes:
+        """Sequential read advancing the fd offset."""
+        of = self._of(fd)
+        if not of.readable:
+            raise CfsOSError(errno.EBADF, of.path)
+        return of.file.read(size)
+
+    def write(self, fd: int, data: bytes) -> int:
+        """Sequential write at the fd offset (EOF under O_APPEND)."""
+        of = self._of(fd)
+        if not of.writable:
+            raise CfsOSError(errno.EBADF, of.path)
+        if of.flags & O_APPEND:
+            of.file.seek(of.file.size)
+        return of.file.write(data)
+
+    def lseek(self, fd: int, offset: int) -> int:
+        of = self._of(fd)
+        if offset < 0:
+            raise CfsOSError(errno.EINVAL, of.path)
+        of.file.seek(offset)
+        return offset
+
+    def ftruncate(self, fd: int, size: int) -> None:
+        of = self._of(fd)
+        if not of.writable:
+            raise CfsOSError(errno.EBADF, of.path)
+        if size < 0:
+            raise CfsOSError(errno.EINVAL, of.path)
+        of.file.truncate(size)
+
+    def fstat(self, fd: int) -> Dict:
+        """Attributes from the handle: cached inode view with the LIVE size
+        and extent map (unflushed appends included), like a kernel's
+        in-core inode."""
+        of = self._of(fd)
+        f = of.file
+        view = dict(f.inode)
+        view["size"] = f.size
+        view["extents"] = [k.as_tuple() for k in f._extents]
+        return view
+
+    def fsync(self, fd: int) -> None:
+        of = self._of(fd)
+        try:
+            of.file.fsync()
+        except (FsError, MetaError) as e:
+            raise _oserror(e, of.path)
+
+    # ------------------------------------------------------------- path ops
+    def mkdir(self, path: str, mode: int = 0o755) -> int:
+        parent, leaf, _ = self._resolve(path, parent_only=True)
+        try:
+            inode = self.client.create(parent, leaf, InodeType.DIR)
+        except (FsError, MetaError) as e:
+            raise _oserror(e, path)
+        return inode["inode"]
+
+    def rmdir(self, path: str) -> None:
+        parent, leaf, dentry = self._resolve(path)
+        if dentry is None:
+            raise CfsOSError(errno.ENOENT, path)
+        if dentry["type"] != InodeType.DIR:
+            raise CfsOSError(errno.ENOTDIR, path)
+        if self.client.readdir(dentry["inode"]):
+            raise CfsOSError(errno.ENOTEMPTY, path)
+        try:
+            # dentry delete + dir nlink dec + evict + parent ".." dec — one
+            # round-trip when the dir inode colocates with its dentry
+            self.client.remove(parent, leaf, dentry["inode"],
+                               dec_parent_link=True)
+        except (FsError, MetaError) as e:
+            raise _oserror(e, path)
+
+    def unlink(self, path: str) -> None:
+        parent, leaf, dentry = self._resolve(path)
+        if dentry is None:
+            raise CfsOSError(errno.ENOENT, path)
+        if dentry["type"] == InodeType.DIR:
+            raise CfsOSError(errno.EISDIR, path)
+        try:
+            self.client.remove(parent, leaf, dentry["inode"])
+        except (FsError, MetaError) as e:
+            raise _oserror(e, path)
+
+    def rename(self, src: str, dst: str) -> None:
+        """Move the dentry (dst created before src is deleted) — atomic when
+        both parents share a partition, otherwise the paper's relaxed
+        metadata atomicity.  Existing dst is an error (no implicit replace
+        under relaxed semantics)."""
+        src_parent, src_leaf, src_dentry = self._resolve(src)
+        if src_dentry is None:
+            raise CfsOSError(errno.ENOENT, src)
+        if src_dentry["inode"] == ROOT_INODE:
+            raise CfsOSError(errno.EINVAL, src)     # can't move the root
+        dst_parent, dst_leaf, dst_dentry = self._resolve(dst)
+        if dst_dentry is not None:
+            if dst_dentry["inode"] == src_dentry["inode"]:
+                return      # rename(2): same inode -> no-op success
+            raise CfsOSError(errno.EEXIST, dst)
+        if src_dentry["type"] == InodeType.DIR and \
+                src_dentry["inode"] in self._dir_chain(dst):
+            # moving a directory into its own subtree would detach it into
+            # an unreachable cycle; POSIX says EINVAL
+            raise CfsOSError(errno.EINVAL, dst)
+        try:
+            self.client.rename_entry(src_parent, src_leaf, dst_parent,
+                                     dst_leaf, src_dentry["inode"],
+                                     src_dentry["type"])
+        except (FsError, MetaError) as e:
+            raise _oserror(e, src)
+
+    def link(self, src: str, dst: str) -> None:
+        src_ino = self.path_inode(src)
+        parent, leaf, dentry = self._resolve(dst)
+        if dentry is not None:
+            raise CfsOSError(errno.EEXIST, dst)
+        try:
+            self.client.link(src_ino, parent, leaf)
+        except (FsError, MetaError) as e:
+            raise _oserror(e, dst)
+
+    def symlink(self, target: str, linkpath: str) -> None:
+        parent, leaf, dentry = self._resolve(linkpath)
+        if dentry is not None:
+            raise CfsOSError(errno.EEXIST, linkpath)
+        try:
+            self.client.create(parent, leaf, InodeType.SYMLINK,
+                               link_target=target.encode())
+        except (FsError, MetaError) as e:
+            raise _oserror(e, linkpath)
+
+    def readlink(self, path: str) -> str:
+        inode = self._stat_inode(path)
+        if inode["type"] != InodeType.SYMLINK:
+            raise CfsOSError(errno.EINVAL, path)
+        return inode["link_target"].decode()
+
+    def _stat_inode(self, path: str) -> Dict:
+        try:
+            return self.client.get_inode(self.path_inode(path))
+        except NotFound:
+            raise CfsOSError(errno.ENOENT, path)
+
+    def stat(self, path: str) -> Dict:
+        return self._stat_inode(path)
+
+    def exists(self, path: str) -> bool:
+        try:
+            self.path_inode(path)
+            return True
+        except CfsOSError:
+            return False
+
+    def readdir(self, path: str) -> List[str]:
+        ino, _ = self._dir_inode(path)
+        return [d["name"] for d in self.client.readdir(ino)]
+
+    def readdir_plus(self, path: str) -> List[Dict]:
+        """readdir + attrs in one pass — the paper's batchInodeGet DirStat
+        path (§4.2): ONE batched inode fetch per meta partition."""
+        ino, _ = self._dir_inode(path)
+        return self.client.readdir_plus(ino)
+
+    def _dir_chain(self, path: str) -> List[int]:
+        """Inodes of every directory on ``path``'s parent chain (root
+        included) — the ancestry a rename must not move a dir into."""
+        chain = [ROOT_INODE]
+        parts = [p for p in posixpath.normpath(path).split("/") if p]
+        parent = ROOT_INODE
+        for comp in parts[:-1]:
+            try:
+                d = self.client.lookup(parent, comp)
+            except NotFound:
+                break
+            parent = d["inode"]
+            chain.append(parent)
+        return chain
+
+    def _dir_inode(self, path: str) -> Tuple[int, int]:
+        _, _, dentry = self._resolve(path)
+        if dentry is None:
+            raise CfsOSError(errno.ENOENT, path)
+        if dentry["type"] != InodeType.DIR:
+            raise CfsOSError(errno.ENOTDIR, path)
+        return dentry["inode"], dentry["type"]
+
+    def statfs(self, path: str = "/") -> Dict[str, int]:
+        """statvfs(3) over the volume: one RM round-trip."""
+        try:
+            leader = self.client.rm.leader_id()
+            out = self.client.net.call(
+                self.client.client_id, leader, self.client.rm.statfs,
+                self.client.volume, kind="client.rm")
+        except KeyError:
+            raise CfsOSError(errno.ENOENT, self.client.volume)
+        except NetError:
+            raise CfsOSError(errno.EIO, path)
+        self.client.stats["rm_calls"] += 1
+        return out
+
+    # ---------------------------------------------------------- maintenance
+    def handle(self, fd: int) -> CfsFile:
+        """Low-level escape hatch (tools/demos): the CfsFile behind an fd."""
+        return self._of(fd).file
+
+    def open_fds(self) -> List[int]:
+        return sorted(self._fds)
+
+    def evict_orphans(self) -> int:
+        return self.client.evict_orphans()

@@ -108,15 +108,24 @@ def test_rm_failover(cluster):
 
 
 def test_orphan_inode_on_dentry_failure(cluster):
-    """Fig. 3 failure arm: inode created, dentry fails -> orphan list -> evict."""
+    """Fig. 3 failure arm (scatter path): inode created, dentry fails ->
+    orphan list -> evict.  Only reachable with coalescing off — the batched
+    create validates the dentry before allocating, so it has no orphan
+    window (asserted below)."""
     mnt = cluster.mount("v")
     mnt.write_file("/dup", b"first")
+    mnt.client.coalesce_meta = False
     before_orphans = len(mnt.client.orphan_inodes)
     with pytest.raises(Exception):
         mnt.client.create(1, "dup")          # dentry exists -> failure arm
     assert len(mnt.client.orphan_inodes) == before_orphans + 1
     evicted = mnt.client.evict_orphans()
     assert evicted >= 1
+    assert not mnt.client.orphan_inodes
+    # coalesced create: same error, but atomic -> nothing orphaned
+    mnt.client.coalesce_meta = True
+    with pytest.raises(Exception):
+        mnt.client.create(1, "dup")
     assert not mnt.client.orphan_inodes
 
 

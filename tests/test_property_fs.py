@@ -13,6 +13,7 @@ apply O_TRUNC (falsifying example: write('a', b'\\x00'); write('a', b'')).
 from typing import Dict
 
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

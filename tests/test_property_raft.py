@@ -4,6 +4,7 @@ schedules (kill / revive / partition / heal / propose / tick)."""
 from typing import Dict
 
 import pytest
+pytest.importorskip("hypothesis")
 from hypothesis import HealthCheck, given, settings
 from hypothesis import strategies as st
 

@@ -9,6 +9,7 @@ reference paths:
   * TP head padding == unpadded attention
 """
 
+import os
 import subprocess
 import sys
 
@@ -104,12 +105,13 @@ print("sharded train_step executes: OK, loss", float(m_["loss"]))
 
 
 def test_multidevice_equivalence():
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     res = subprocess.run(
         [sys.executable, "-c", _SCRIPT],
         capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
-        cwd="/root/repo",
+        env={"PYTHONPATH": "src", "PATH": os.environ.get("PATH", "/usr/bin:/bin"),
+             "HOME": os.environ.get("HOME", "/root")},
+        cwd=repo_root,
     )
     assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr[-3000:]}"
     assert "sharded train_step executes: OK" in res.stdout

@@ -1,0 +1,535 @@
+"""POSIX VFS surface: flags, fd lifecycle, offset I/O, ftruncate, errno.
+
+Also holds the acceptance check for the batched-metadata redesign: the
+mdtest create+fill workload must issue strictly fewer metadata round-trips
+through the VFS (coalesced RPCs) than through the seed scatter path.
+"""
+
+import errno
+
+import pytest
+
+from repro.core import (CfsCluster, CfsOSError, CfsVfs, O_APPEND, O_CREAT,
+                        O_EXCL, O_RDONLY, O_RDWR, O_TRUNC, O_WRONLY,
+                        SMALL_FILE_THRESHOLD)
+
+
+@pytest.fixture
+def cluster():
+    c = CfsCluster(n_meta=4, n_data=6, extent_max_size=1024 * 1024, seed=11)
+    c.create_volume("v", n_meta_partitions=3, n_data_partitions=8)
+    return c
+
+
+@pytest.fixture
+def vfs(cluster):
+    return cluster.mount("v").vfs
+
+
+def write_new(vfs, path, data=b""):
+    fd = vfs.open(path, O_WRONLY | O_CREAT | O_TRUNC)
+    if data:
+        vfs.pwrite(fd, data, 0)
+    vfs.close(fd)
+
+
+def read_all(vfs, path):
+    fd = vfs.open(path, O_RDONLY)
+    try:
+        return vfs.read(fd, -1)
+    finally:
+        vfs.close(fd)
+
+
+def expect_errno(code, fn, *args):
+    with pytest.raises(CfsOSError) as ei:
+        fn(*args)
+    assert ei.value.errno == code, \
+        f"expected {errno.errorcode[code]}, got {ei.value!r}"
+
+
+# ---------------------------------------------------------------- open flags
+def test_o_creat_creates_and_opens(vfs):
+    fd = vfs.open("/new.txt", O_WRONLY | O_CREAT)
+    assert isinstance(fd, int) and fd >= 3
+    vfs.close(fd)
+    assert vfs.exists("/new.txt")
+
+
+def test_o_creat_excl_on_existing_is_eexist(vfs):
+    write_new(vfs, "/x.txt", b"1")
+    expect_errno(errno.EEXIST, vfs.open, "/x.txt",
+                 O_WRONLY | O_CREAT | O_EXCL)
+    # and the failed attempt must not have clobbered the file
+    assert read_all(vfs, "/x.txt") == b"1"
+
+
+def test_open_missing_without_creat_is_enoent(vfs):
+    expect_errno(errno.ENOENT, vfs.open, "/nope.txt", O_RDONLY)
+    expect_errno(errno.ENOENT, vfs.open, "/nope.txt", O_RDWR)
+
+
+def test_o_trunc_drops_content(vfs):
+    write_new(vfs, "/t.txt", b"old content")
+    fd = vfs.open("/t.txt", O_WRONLY | O_TRUNC)
+    vfs.close(fd)
+    assert vfs.stat("/t.txt")["size"] == 0
+
+
+def test_o_append_writes_at_eof(vfs):
+    write_new(vfs, "/log", b"aaaa")
+    fd = vfs.open("/log", O_WRONLY | O_APPEND)
+    vfs.pwrite(fd, b"bb", 0)       # offset ignored under O_APPEND
+    vfs.pwrite(fd, b"cc", 1)
+    vfs.close(fd)
+    assert read_all(vfs, "/log") == b"aaaabbcc"
+
+
+def test_open_dir_for_write_is_eisdir(vfs):
+    vfs.mkdir("/d")
+    expect_errno(errno.EISDIR, vfs.open, "/d", O_WRONLY)
+    expect_errno(errno.EISDIR, vfs.open, "/", O_RDWR)
+
+
+def test_open_through_file_component_is_enotdir(vfs):
+    write_new(vfs, "/plain", b"z")
+    expect_errno(errno.ENOTDIR, vfs.open, "/plain/sub", O_RDONLY | O_CREAT)
+
+
+# ------------------------------------------------------------- fd lifecycle
+def test_fds_are_distinct_integers(vfs):
+    write_new(vfs, "/a", b"")
+    fds = [vfs.open("/a", O_RDONLY) for _ in range(4)]
+    assert len(set(fds)) == 4
+    for fd in fds:
+        vfs.close(fd)
+
+
+def test_double_close_is_ebadf(vfs):
+    write_new(vfs, "/a", b"")
+    fd = vfs.open("/a", O_RDONLY)
+    vfs.close(fd)
+    expect_errno(errno.EBADF, vfs.close, fd)
+    expect_errno(errno.EBADF, vfs.pread, fd, 1, 0)
+    expect_errno(errno.EBADF, vfs.fstat, fd)
+
+
+def test_write_on_rdonly_fd_is_ebadf(vfs):
+    write_new(vfs, "/a", b"data")
+    fd = vfs.open("/a", O_RDONLY)
+    expect_errno(errno.EBADF, vfs.pwrite, fd, b"x", 0)
+    expect_errno(errno.EBADF, vfs.ftruncate, fd, 0)
+    vfs.close(fd)
+
+
+def test_read_on_wronly_fd_is_ebadf(vfs):
+    write_new(vfs, "/a", b"data")
+    fd = vfs.open("/a", O_WRONLY)
+    expect_errno(errno.EBADF, vfs.pread, fd, 1, 0)
+    vfs.close(fd)
+
+
+# ------------------------------------------------------------ offset I/O
+def test_pread_pwrite_at_offsets(vfs):
+    write_new(vfs, "/io", b"0123456789")
+    fd = vfs.open("/io", O_RDWR)
+    assert vfs.pread(fd, 4, 3) == b"3456"
+    assert vfs.pwrite(fd, b"XY", 5) == 2
+    assert vfs.pread(fd, 10, 0) == b"01234XY789"
+    vfs.close(fd)
+
+
+def test_pread_does_not_move_offset(vfs):
+    write_new(vfs, "/io", b"abcdef")
+    fd = vfs.open("/io", O_RDONLY)
+    assert vfs.read(fd, 2) == b"ab"
+    assert vfs.pread(fd, 2, 4) == b"ef"
+    assert vfs.read(fd, 2) == b"cd"     # sequential offset untouched by pread
+    vfs.close(fd)
+
+
+def test_pwrite_past_eof_reads_back_zero_filled(vfs):
+    write_new(vfs, "/sparse", b"head")
+    fd = vfs.open("/sparse", O_RDWR)
+    vfs.pwrite(fd, b"tail", 100)
+    assert vfs.fstat(fd)["size"] == 104
+    got = vfs.pread(fd, 104, 0)
+    vfs.close(fd)
+    assert got == b"head" + b"\x00" * 96 + b"tail"
+
+
+def test_large_file_roundtrip_via_fd(vfs):
+    data = bytes(range(256)) * 4096            # 1 MiB, crosses extents
+    fd = vfs.open("/big", O_WRONLY | O_CREAT)
+    step = 128 * 1024
+    for off in range(0, len(data), step):
+        vfs.write(fd, data[off:off + step])
+    vfs.close(fd)
+    assert read_all(vfs, "/big") == data
+
+
+# ------------------------------------------------------------- ftruncate
+def test_ftruncate_shrink_and_grow(vfs):
+    write_new(vfs, "/tr", b"abcdefghij")
+    fd = vfs.open("/tr", O_RDWR)
+    vfs.ftruncate(fd, 4)
+    assert vfs.pread(fd, 10, 0) == b"abcd"
+    vfs.ftruncate(fd, 7)                       # grow: zero-filled hole
+    assert vfs.pread(fd, 10, 0) == b"abcd\x00\x00\x00"
+    vfs.close(fd)
+    assert vfs.stat("/tr")["size"] == 7
+
+
+def test_ftruncate_shrink_large_file_trims_extents(vfs):
+    data = b"Q" * (400 * 1024)                 # several 128K packets
+    write_new(vfs, "/big", data)
+    cut = 200 * 1024 + 17
+    fd = vfs.open("/big", O_RDWR)
+    vfs.ftruncate(fd, cut)
+    vfs.close(fd)
+    assert read_all(vfs, "/big") == data[:cut]
+    st = vfs.stat("/big")
+    assert st["size"] == cut
+    # no extent key maps past the new EOF
+    assert all(foff + esize <= cut
+               for (_, _, foff, _, esize) in st["extents"])
+
+
+def test_ftruncate_negative_is_einval(vfs):
+    write_new(vfs, "/tr", b"x")
+    fd = vfs.open("/tr", O_RDWR)
+    expect_errno(errno.EINVAL, vfs.ftruncate, fd, -1)
+    vfs.close(fd)
+
+
+def test_negative_offset_io_is_einval(vfs):
+    write_new(vfs, "/neg", b"abcdef")
+    fd = vfs.open("/neg", O_RDWR)
+    expect_errno(errno.EINVAL, vfs.pread, fd, 4, -3)
+    expect_errno(errno.EINVAL, vfs.pwrite, fd, b"x", -1)
+    vfs.close(fd)
+
+
+def test_truncate_flushes_inflight_append_buffer(vfs):
+    """Regression (seed bug): a buffered append was silently dropped by
+    truncate.  Buffered bytes inside the surviving range must persist."""
+    fd = vfs.open("/buf", O_WRONLY | O_CREAT)
+    vfs.write(fd, b"A" * 1000)                 # < 128K: stays buffered
+    vfs.ftruncate(fd, 600)                     # must flush THEN trim
+    vfs.close(fd)
+    assert read_all(vfs, "/buf") == b"A" * 600
+
+
+def test_truncate_then_write_then_reopen(vfs):
+    fd = vfs.open("/seq", O_WRONLY | O_CREAT)
+    vfs.write(fd, b"0123456789")
+    vfs.ftruncate(fd, 4)
+    vfs.pwrite(fd, b"XY", 4)                   # append after the cut
+    vfs.close(fd)
+    assert read_all(vfs, "/seq") == b"0123XY"
+
+
+# ------------------------------------------------------------ fstat / fsync
+def test_fstat_extents_match_live_size(vfs):
+    """Regression: fstat refreshed size but returned the stale open-time
+    extent list (300 KB file with zero extents)."""
+    fd = vfs.open("/big", O_WRONLY | O_CREAT)
+    vfs.write(fd, b"z" * (300 * 1024))
+    vfs.fsync(fd)
+    st = vfs.fstat(fd)
+    assert st["size"] == 300 * 1024
+    assert st["extents"], st
+    assert sum(e[4] for e in st["extents"]) == 300 * 1024
+    vfs.close(fd)
+
+
+def test_cross_partition_rename_keeps_nlink_consistent(cluster):
+    """The scatter-mode rename brackets nlink so it always equals the
+    dentry count; the moved inode ends where it started."""
+    vfs = cluster.mount("v").vfs
+    vfs.client.coalesce_meta = False           # forces the bracketed path
+    write_new(vfs, "/f", b"payload")
+    vfs.mkdir("/sub")
+    vfs.rename("/f", "/sub/g")
+    st = vfs.stat("/sub/g")
+    assert st["nlink"] == 1 and st["flag"] == 0
+    assert read_all(vfs, "/sub/g") == b"payload"
+    vfs.mkdir("/d1")
+    vfs.rename("/d1", "/sub/d2")               # dir: 2→3→2, stays NORMAL
+    st = vfs.stat("/sub/d2")
+    assert st["nlink"] == 2 and st["flag"] == 0
+    vfs.rmdir("/sub/d2")                       # still deletable afterwards
+
+
+def test_fstat_sees_unflushed_size(vfs):
+    fd = vfs.open("/f", O_WRONLY | O_CREAT)
+    vfs.write(fd, b"12345")
+    assert vfs.fstat(fd)["size"] == 5          # live, pre-fsync
+    vfs.fsync(fd)
+    vfs.close(fd)
+    assert vfs.stat("/f")["size"] == 5
+
+
+def test_fsync_makes_other_mount_see_data(cluster):
+    v1 = cluster.mount("v").vfs
+    v2 = cluster.mount("v").vfs
+    fd = v1.open("/shared", O_WRONLY | O_CREAT)
+    v1.pwrite(fd, b"visible", 0)
+    v1.fsync(fd)
+    assert read_all(v2, "/shared") == b"visible"
+    v1.close(fd)
+
+
+# ------------------------------------------------------------- path ops
+def test_mkdir_rmdir_errno(vfs):
+    vfs.mkdir("/d")
+    expect_errno(errno.EEXIST, vfs.mkdir, "/d")
+    expect_errno(errno.ENOENT, vfs.mkdir, "/missing/sub")
+    write_new(vfs, "/file", b"")
+    expect_errno(errno.ENOTDIR, vfs.mkdir, "/file/sub")
+    expect_errno(errno.ENOTDIR, vfs.rmdir, "/file")
+    write_new(vfs, "/d/x", b"")
+    expect_errno(errno.ENOTEMPTY, vfs.rmdir, "/d")
+    vfs.unlink("/d/x")
+    vfs.rmdir("/d")
+    expect_errno(errno.ENOENT, vfs.rmdir, "/d")
+
+
+def test_unlink_errno(vfs):
+    expect_errno(errno.ENOENT, vfs.unlink, "/missing")
+    vfs.mkdir("/d")
+    expect_errno(errno.EISDIR, vfs.unlink, "/d")
+    write_new(vfs, "/d/f", b"bye")
+    vfs.unlink("/d/f")
+    expect_errno(errno.ENOENT, vfs.open, "/d/f", O_RDONLY)
+
+
+def test_rename_directory_preserves_inode(vfs):
+    """Regression: the link+unlink rename spelling round-tripped a dir's
+    nlink through its live floor and evicted it — rename must move the
+    dentry and leave the inode untouched."""
+    vfs.mkdir("/olddir")
+    write_new(vfs, "/olddir/child", b"c")
+    ino = vfs.stat("/olddir")["inode"]
+    vfs.rename("/olddir", "/newdir")
+    st = vfs.stat("/newdir")
+    assert st["inode"] == ino
+    assert st["nlink"] == 2                    # unchanged: ".", parent entry
+    assert vfs.readdir("/newdir") == ["child"]
+    assert read_all(vfs, "/newdir/child") == b"c"
+    assert not vfs.exists("/olddir")
+    # the evicted-inode-id-reuse corruption: a fresh dir must NOT alias
+    vfs.mkdir("/other")
+    write_new(vfs, "/other/x", b"")
+    assert vfs.readdir("/newdir") == ["child"]
+
+
+def test_rename_file_keeps_nlink(vfs):
+    write_new(vfs, "/f", b"data")
+    assert vfs.stat("/f")["nlink"] == 1
+    vfs.rename("/f", "/g")
+    assert vfs.stat("/g")["nlink"] == 1
+
+
+def test_o_append_rdwr_reads_from_start(vfs):
+    """POSIX: O_APPEND pins writes to EOF but reads start at offset 0."""
+    write_new(vfs, "/log", b"hello")
+    fd = vfs.open("/log", O_RDWR | O_APPEND)
+    assert vfs.read(fd, 5) == b"hello"
+    vfs.write(fd, b"!")                        # still appends at EOF
+    vfs.close(fd)
+    assert read_all(vfs, "/log") == b"hello!"
+
+
+def test_pwrite_into_truncate_grow_hole(vfs):
+    """Regression: a pwrite landing in a hole left by ftruncate-grow used to
+    be silently discarded (no extent covered the range)."""
+    fd = vfs.open("/h", O_RDWR | O_CREAT)
+    vfs.pwrite(fd, b"abcd", 0)
+    vfs.ftruncate(fd, 8)                       # hole [4, 8)
+    vfs.pwrite(fd, b"XY", 5)                   # lands inside the hole
+    vfs.close(fd)
+    assert read_all(vfs, "/h") == b"abcd\x00XY\x00"
+
+
+def test_rename_into_own_subtree_is_einval(vfs):
+    """Regression: moving a dir under itself detached it into an
+    unreachable cycle — POSIX requires EINVAL."""
+    vfs.mkdir("/d")
+    vfs.mkdir("/d/e")
+    write_new(vfs, "/d/e/keep", b"k")
+    expect_errno(errno.EINVAL, vfs.rename, "/d", "/d/e/f")
+    expect_errno(errno.EINVAL, vfs.rename, "/d", "/d/x")
+    expect_errno(errno.EINVAL, vfs.rename, "/", "/d/root")
+    assert read_all(vfs, "/d/e/keep") == b"k"  # subtree untouched
+
+
+def test_scatter_mode_o_creat_reopen_has_no_orphans(cluster):
+    """Regression: with coalescing off, O_CREAT on an EXISTING file used to
+    allocate an inode, fail the dentry, and orphan it on every reopen."""
+    vfs = cluster.mount("v").vfs
+    vfs.client.coalesce_meta = False
+    write_new(vfs, "/f", b"x")
+    before = len(vfs.client.orphan_inodes)
+    for _ in range(5):
+        fd = vfs.open("/f", O_WRONLY | O_CREAT)
+        vfs.close(fd)
+    assert len(vfs.client.orphan_inodes) == before
+    expect_errno(errno.EEXIST, vfs.open, "/f", O_WRONLY | O_CREAT | O_EXCL)
+
+
+def test_statfs_missing_volume_is_enoent(cluster):
+    vfs = cluster.mount("v").vfs
+    vfs.client.volume = "no-such-volume"
+    expect_errno(errno.ENOENT, vfs.statfs)
+
+
+def test_rename_same_path_is_noop(vfs):
+    write_new(vfs, "/same", b"keep")
+    vfs.rename("/same", "/same")               # rename(2): no-op success
+    assert read_all(vfs, "/same") == b"keep"
+    vfs.link("/same", "/alias")
+    vfs.rename("/same", "/alias")              # same inode -> also a no-op
+    assert vfs.exists("/same") and vfs.exists("/alias")
+    assert vfs.stat("/same")["nlink"] == 2
+
+
+def test_rename_errno_and_content(vfs):
+    expect_errno(errno.ENOENT, vfs.rename, "/missing", "/dst")
+    write_new(vfs, "/src", b"payload")
+    write_new(vfs, "/taken", b"")
+    expect_errno(errno.EEXIST, vfs.rename, "/src", "/taken")
+    vfs.rename("/src", "/dst")
+    assert read_all(vfs, "/dst") == b"payload"
+    assert not vfs.exists("/src")
+
+
+def test_stat_readdir_errno(vfs):
+    expect_errno(errno.ENOENT, vfs.stat, "/missing")
+    write_new(vfs, "/f", b"")
+    expect_errno(errno.ENOTDIR, vfs.readdir, "/f")
+    expect_errno(errno.ENOTDIR, vfs.readdir_plus, "/f")
+
+
+def test_link_and_symlink(vfs):
+    write_new(vfs, "/orig", b"shared")
+    vfs.link("/orig", "/alias")
+    assert vfs.stat("/alias")["nlink"] == 2
+    vfs.unlink("/orig")
+    assert read_all(vfs, "/alias") == b"shared"
+    vfs.symlink("/alias", "/ln")
+    assert vfs.readlink("/ln") == "/alias"
+    expect_errno(errno.EINVAL, vfs.readlink, "/alias")  # not a symlink
+
+
+def test_readdir_plus_returns_attrs(vfs):
+    vfs.mkdir("/dir")
+    for i in range(8):
+        write_new(vfs, f"/dir/f{i}", b"x" * i)
+    entries = vfs.readdir_plus("/dir")
+    assert len(entries) == 8
+    by_name = {e["name"]: e for e in entries}
+    for i in range(8):
+        assert by_name[f"f{i}"]["attr"]["size"] == i
+
+
+def test_statfs_shape(cluster, vfs):
+    write_new(vfs, "/f", b"x" * 4096)
+    cluster.tick(1)                            # heartbeats feed f_files
+    sf = vfs.statfs()
+    assert sf["f_blocks"] > 0
+    assert 0 < sf["f_bfree"] <= sf["f_blocks"]
+    assert sf["f_bsize"] > 0
+    # f_files counts INODES, not inode+dentry entries (root + /f = 2)
+    assert sf["f_files"] == 2, sf
+
+
+def test_double_slash_is_root(vfs):
+    """Regression: '//' (POSIX alternate root spelling) crashed _resolve."""
+    assert vfs.stat("//")["inode"] == vfs.stat("/")["inode"]
+    vfs.mkdir("/d")
+    assert "d" in vfs.readdir("//")
+
+
+def test_parent_dir_stays_live_after_child_removal(cluster, vfs):
+    """Regression: decrementing a parent's nlink 3 -> 2 (rmdir/rename of a
+    subdir) flagged the LIVE parent MARK_DELETED, so fsck repair evicted
+    it and recycled its inode under the surviving dentries."""
+    from repro.core.fsck import fsck
+    vfs.mkdir("/p1")
+    vfs.mkdir("/p2")
+    vfs.mkdir("/p1/sub")
+    vfs.rename("/p1/sub", "/p2/sub")           # /p1 nlink: 3 -> 2
+    assert vfs.stat("/p1")["flag"] == 0        # InodeFlag.NORMAL
+    vfs.rmdir("/p2/sub")                       # /p2 nlink: 3 -> 2
+    assert vfs.stat("/p2")["flag"] == 0
+    fsck(cluster, "v", repair=True)
+    assert vfs.stat("/p1")["type"] == 1        # both parents survive repair
+    assert vfs.stat("/p2")["type"] == 1
+    write_new(vfs, "/p1/back", b"alive")
+    assert read_all(vfs, "/p1/back") == b"alive"
+
+
+# ----------------------------------------------- batched metadata round-trips
+def _create_fill(api, base: str, n: int, payload: bytes) -> None:
+    """The mdtest create+fill loop, spelled for either API surface."""
+    if isinstance(api, CfsVfs):
+        api.mkdir(base)
+        for i in range(n):
+            fd = api.open(f"{base}/f{i}", O_WRONLY | O_CREAT | O_TRUNC)
+            api.pwrite(fd, payload, 0)
+            api.close(fd)
+    else:
+        api.mkdir(base)
+        for i in range(n):
+            api.write_file(f"{base}/f{i}", payload)
+
+
+def test_create_fill_fewer_meta_roundtrips_than_seed():
+    """Acceptance: VFS create+fill uses strictly fewer metadata RPCs than
+    the seed scatter path, and reports the coalescing through stats."""
+    n, payload = 24, b"p" * 1024
+
+    seed_cluster = CfsCluster(n_meta=4, n_data=6,
+                              extent_max_size=1024 * 1024, seed=5)
+    seed_cluster.create_volume("v", 3, 8)
+    seed_mnt = seed_cluster.mount("v")
+    seed_mnt.client.coalesce_meta = False      # the seed Fig. 3 workflow
+    _create_fill(seed_mnt, "/md", n, payload)
+    seed_calls = seed_mnt.client.stats["meta_calls"]
+
+    new_cluster = CfsCluster(n_meta=4, n_data=6,
+                             extent_max_size=1024 * 1024, seed=5)
+    new_cluster.create_volume("v", 3, 8)
+    new_vfs = new_cluster.mount("v").vfs
+    _create_fill(new_vfs, "/md", n, payload)
+    new_calls = new_vfs.client.stats["meta_calls"]
+
+    assert new_calls < seed_calls, (new_calls, seed_calls)
+    assert new_vfs.client.stats["meta_saved_roundtrips"] > 0
+    assert new_vfs.client.stats["meta_batched_ops"] > 0
+    # both worlds produced identical namespaces
+    assert sorted(new_vfs.readdir("/md")) == \
+        sorted(seed_mnt.readdir("/md"))
+
+
+def test_remove_coalesces_roundtrips(vfs):
+    write_new(vfs, "/rm_me", b"d" * 256)
+    before = vfs.client.stats["meta_calls"]
+    saved_before = vfs.client.stats["meta_saved_roundtrips"]
+    vfs.unlink("/rm_me")
+    # resolve lookup + ONE batched mutation when inode/dentry colocate,
+    # at most dentry + (dec+evict) batches when they don't
+    assert vfs.client.stats["meta_calls"] - before <= 3
+    assert vfs.client.stats["meta_saved_roundtrips"] > saved_before
+
+
+def test_batched_create_is_atomic_under_eexist(vfs):
+    """The coalesced create validates before allocating: a failed create
+    leaves no orphan inode behind (better than the Fig. 3 failure arm)."""
+    write_new(vfs, "/dup", b"1")
+    before = list(vfs.client.orphan_inodes)
+    expect_errno(errno.EEXIST, vfs.open, "/dup",
+                 O_WRONLY | O_CREAT | O_EXCL)
+    assert vfs.client.orphan_inodes == before
+    assert read_all(vfs, "/dup") == b"1"
