@@ -1,21 +1,40 @@
-"""Benchmark substrate: deterministic simulated-time IOPS + wall-clock µs.
+"""Benchmark substrate: discrete-event concurrency + tail latency.
 
 Concurrency model (documented in EXPERIMENTS.md): C clients × P processes
-run op streams.  Ops execute round-robin across streams (sequential Python,
-deterministic); each op's modeled latency accumulates on its stream, and
-every RPC/disk cost accrues to the serving node's busy ledger.  Simulated
-makespan = max(longest stream, busiest node) — a standard bottleneck bound
-that captures exactly the contention effects the paper measures (one hot
-MDS / meta partition serializes; spread load doesn't).
+run op streams.  An :class:`~repro.core.simnet.EventScheduler` interleaves
+the streams by *virtual time* — each stream's next op is dispatched at the
+completion time of its previous one, and ties fire in deterministic
+schedule order.  Every op runs as a *timed* op: its RPCs and disk IO queue
+on per-node FIFO resources (NIC and disk are separate servers), so an op's
+latency = propagation + queueing + service, and concurrent streams contend
+for the same hardware instead of overlapping for free.  The per-client
+FUSE daemon is itself a shared resource: 64 procs on one client machine
+queue on one daemon, exactly the client-side saturation the paper's
+multi-process curves show.
 
-    IOPS_sim = total_ops / makespan
+    makespan  = latest op completion across all streams
+    IOPS_sim  = total_ops / makespan
+    p50/95/99 = percentiles of per-op latency (submit → completion,
+                queueing included), measured from the event timeline
+
+Same-seed runs are bit-identical: the event heap breaks ties by insertion
+order, all randomness is seeded, and nothing reads the wall clock inside
+the engine (``wall_us_per_op`` is diagnostic only and excluded from the
+determinism guarantee).
 """
 
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
+
+from repro.core.simnet import EventScheduler
+
+# FUSE/VFS per-op client-side cost: 64 procs share ONE fuse daemon + NIC on
+# their client machine, so ops queue on the client's "fuse:<id>" resource.
+FUSE_US = 15.0
 
 
 @dataclass
@@ -28,62 +47,116 @@ class BenchResult:
     sim_iops: float
     wall_us_per_op: float
     latency_us_per_op: float
-    bottleneck: str          # "stream" (latency-bound) | node id (server-bound)
+    p50_us: float
+    p95_us: float
+    p99_us: float
+    bottleneck: str          # "stream" (latency-bound) | resource name
 
     def row(self) -> str:
         return (f"{self.name},{self.system},{self.clients},{self.procs},"
                 f"{self.ops},{self.sim_iops:.0f},{self.wall_us_per_op:.1f},"
-                f"{self.latency_us_per_op:.1f},{self.bottleneck}")
+                f"{self.latency_us_per_op:.1f},{self.p50_us:.1f},"
+                f"{self.p95_us:.1f},{self.p99_us:.1f},{self.bottleneck}")
+
+    def json_obj(self) -> Dict:
+        """Machine-readable form for BENCH_<suite>.json — simulated-time
+        fields only (wall clock would break bit-identical reruns)."""
+        return {
+            "test": self.name, "system": self.system,
+            "clients": self.clients, "procs": self.procs, "ops": self.ops,
+            "sim_iops": round(self.sim_iops, 3),
+            "lat_us_per_op": round(self.latency_us_per_op, 3),
+            "p50_us": round(self.p50_us, 3),
+            "p95_us": round(self.p95_us, 3),
+            "p99_us": round(self.p99_us, 3),
+            "bottleneck": self.bottleneck,
+        }
 
 
 HEADER = ("test,system,clients,procs,ops,sim_iops,wall_us_per_op,"
-          "lat_us_per_op,bottleneck")
+          "lat_us_per_op,p50_us,p95_us,p99_us,bottleneck")
 
 
-# FUSE/VFS per-op client-side cost: 64 procs share ONE fuse daemon + NIC on
-# their client machine, so this accrues to the client node's busy ledger too.
-FUSE_US = 15.0
+def percentile(sorted_lat: List[float], q: float) -> float:
+    """Nearest-rank percentile over an already-sorted sample."""
+    if not sorted_lat:
+        return 0.0
+    rank = max(1, math.ceil(q * len(sorted_lat)))
+    return sorted_lat[min(rank, len(sorted_lat)) - 1]
 
 
 def run_streams(
     name: str,
     system: str,
     net,
-    streams: List[Tuple[str, List[Callable[[], None]]]],
+    streams: List[Tuple[str, Iterable[Callable[[], None]]]],
     clients: int,
     procs: int,
     weight: int = 1,          # logical ops per thunk (e.g. stats per dir_stat)
+    trace: Optional[List[Tuple[float, int]]] = None,
 ) -> BenchResult:
-    """streams: one (client_id, [thunks]) per (client, proc) stream."""
+    """streams: one (client_id, ops) per (client, proc) stream; ``ops`` is
+    any iterable of thunks (list or generator) — the engine pulls the next
+    op when the previous one completes in virtual time.
+
+    ``trace``, if given, collects (dispatch_time_us, stream_index) tuples —
+    the event order, used by the determinism property test."""
     net.reset_accounting()
-    stream_us = [0.0] * len(streams)
-    total_ops = sum(len(s) for _, s in streams)
+    sched = EventScheduler()
+    iters = [iter(ops) for _, ops in streams]
+    lat: List[float] = []
+    done = 0
+    makespan = 0.0
     t0 = time.perf_counter()
-    # round-robin across streams (deterministic interleaving)
-    idx = [0] * len(streams)
-    remaining = total_ops
-    while remaining:
-        for si, (client_id, s) in enumerate(streams):
-            if idx[si] >= len(s):
-                continue
-            op = net.begin_op()
-            s[idx[si]]()
+
+    def dispatch(t: float, si: int) -> None:
+        nonlocal done, makespan
+        try:
+            thunk = next(iters[si])
+        except StopIteration:
+            return
+        if trace is not None:
+            trace.append((round(t, 3), si))
+        cid = streams[si][0]
+        # the proc submits at t; the shared per-client FUSE daemon is the
+        # first queue it waits in
+        tq = net.resource(f"fuse:{cid}").acquire(t, FUSE_US * weight)
+        net.charge_busy(cid, FUSE_US * weight)
+        op = net.begin_op(at=tq)
+        try:
+            thunk()
+        finally:
             net.end_op()
-            stream_us[si] += op.us + FUSE_US * weight
-            net.charge_busy(client_id, FUSE_US * weight)
-            idx[si] += 1
-            remaining -= 1
+        end = op.now_us
+        lat.append((end - t) / weight)
+        done += 1
+        makespan = max(makespan, end)
+        sched.at(end, dispatch, si)      # next op of this stream
+
+    for si in range(len(streams)):
+        sched.at(0.0, dispatch, si)
+    sched.run()
+
     wall = (time.perf_counter() - t0) * 1e6
-    total_ops *= weight
-    longest_stream = max(stream_us) if stream_us else 0.0
-    busiest = max(net.busy_us.items(), key=lambda kv: kv[1],
-                  default=("-", 0.0))
-    makespan = max(longest_stream, busiest[1], 1e-9)
+    total_ops = done * weight
+    makespan = max(makespan, 1e-9)
+    lat.sort()
+    # bottleneck: the busiest FIFO resource if it is near-saturated for the
+    # whole run, else the streams' own serial latency dominates
+    busiest = max(net.resources.values(), key=lambda r: r.busy_us,
+                  default=None)
+    if busiest is not None and busiest.busy_us >= 0.7 * makespan:
+        bottleneck = busiest.name
+    else:
+        bottleneck = "stream"
     return BenchResult(
         name=name, system=system, clients=clients, procs=procs,
         ops=total_ops,
         sim_iops=total_ops / makespan * 1e6,
         wall_us_per_op=wall / max(total_ops, 1),
-        latency_us_per_op=sum(stream_us) / max(total_ops, 1),
-        bottleneck=("stream" if longest_stream >= busiest[1] else busiest[0]),
+        latency_us_per_op=sum(lat) / max(len(lat), 1),
+        p50_us=percentile(lat, 0.50),
+        p95_us=percentile(lat, 0.95),
+        p99_us=percentile(lat, 0.99),
+        bottleneck=bottleneck,
     )

@@ -8,10 +8,10 @@ in reasonable wall time)."""
 from __future__ import annotations
 
 import random
-from typing import List
+from typing import List, Optional, Set
 
-from repro.core import (CfsCluster, O_CREAT, O_RDONLY, O_RDWR, O_TRUNC,
-                        O_WRONLY)
+from repro.core import (CfsCluster, LatencyModel, O_CREAT, O_RDONLY, O_RDWR,
+                        O_TRUNC, O_WRONLY)
 from repro.baseline.cephlike import CephLikeCluster, CephLikeMount
 
 from .common import BenchResult, run_streams
@@ -23,6 +23,17 @@ RAND_IO = 4096
 N_RAND = 16
 
 
+def make_cfs_fast(n_nodes: int = 10):
+    """Modern-hardware variant (25 GbE NICs, NVMe-class disks): on 1 GbE the
+    128 KB seq-write path is NIC-bandwidth-bound and pipelining can only cut
+    latency; here the chain is propagation-bound, so the in-flight window
+    shows up in throughput too (the pipeline A/B rows below use this).
+    Same cluster shape as ``make_cfs``, only the cost model differs."""
+    return make_cfs(n_nodes, latency=LatencyModel(
+        rtt_us=200.0, bw_bytes_per_us=3125.0,
+        disk_seek_us=20.0, disk_bw_bytes_per_us=3000.0))
+
+
 def _prepare(system, mounts, clients, procs):
     files = {}
     for ci in range(clients):
@@ -32,51 +43,78 @@ def _prepare(system, mounts, clients, procs):
     return files
 
 
-def bench_large(system: str, cluster, clients: int, procs: int
-                ) -> List[BenchResult]:
+def bench_large(system: str, cluster, clients: int, procs: int,
+                only: Optional[Set[str]] = None,
+                pipeline_depth: Optional[int] = None) -> List[BenchResult]:
     net = cluster.net
     mounts = _mounts(system, cluster, clients)
+    if pipeline_depth is not None:
+        for m in mounts:
+            m.client.pipeline_depth = pipeline_depth
     files = _prepare(system, mounts, clients, procs)
     results = []
     rng = random.Random(7)
 
-    # --- sequential write: stream the whole file in 128K IOs ----------------
-    def sw(mnt, ci, pi):
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    ios = FILE_SIZE // SEQ_IO
+
+    # --- sequential write -----------------------------------------------------
+    # CFS: ONE op per 128K IO (true per-IO tails; the last IO carries the
+    # close barrier that drains the pipeline window).  Ceph-like: the client
+    # buffers and lands the whole file at close, so per-IO thunks would be
+    # no-ops with meaningless tails — it keeps one whole-file thunk with
+    # weight=ios, i.e. its percentiles are per-IO AVERAGES (documented in
+    # EXPERIMENTS.md §weighted ops), not comparable to CFS's tails.
+    def sw_cfs(mnt, ci, pi):
         path = files[(ci, pi)]
         data = bytes(SEQ_IO)
+        state = {}
 
-        def one_file():
-            if system == "cfs":
-                fd = mnt.open(path, O_WRONLY | O_CREAT | O_TRUNC)
-                for _ in range(FILE_SIZE // SEQ_IO):
-                    mnt.write(fd, data)
-                mnt.close(fd)
-            else:
-                mnt.write_file(path, bytes(FILE_SIZE))
-        return [one_file]
-    ios = FILE_SIZE // SEQ_IO
-    results.append(run_streams(
-        "SeqWrite", system, net,
-        [(_cid(m), sw(m, ci, pi)) for ci, m in enumerate(mounts)
-         for pi in range(procs)], clients, procs, weight=ios))
+        def make(i):
+            def op():
+                if i == 0:
+                    state["fd"] = mnt.open(path, O_WRONLY | O_CREAT | O_TRUNC)
+                mnt.write(state["fd"], data)
+                if i == ios - 1:
+                    mnt.close(state["fd"])
+            return op
+        return (make(i) for i in range(ios))
 
-    # --- sequential read ------------------------------------------------------
+    def sw_ceph(mnt, ci, pi):
+        path = files[(ci, pi)]
+        return [lambda mnt=mnt, path=path:
+                mnt.write_file(path, bytes(FILE_SIZE))]
+    if want("SeqWrite"):
+        sw, w = (sw_cfs, 1) if system == "cfs" else (sw_ceph, ios)
+        results.append(run_streams(
+            "SeqWrite", system, net,
+            [(_cid(m), sw(m, ci, pi)) for ci, m in enumerate(mounts)
+             for pi in range(procs)], clients, procs, weight=w))
+
+    # --- sequential read: one op per 128K IO on both systems ------------------
     def sr(mnt, ci, pi):
         path = files[(ci, pi)]
+        state = {}
 
-        def one_file():
-            if system == "cfs":
-                fd = mnt.open(path, O_RDONLY)
-                for _ in range(FILE_SIZE // SEQ_IO):
-                    mnt.read(fd, SEQ_IO)
-                mnt.close(fd)
-            else:
-                mnt.read_file(path)
-        return [one_file]
-    results.append(run_streams(
-        "SeqRead", system, net,
-        [(_cid(m), sr(m, ci, pi)) for ci, m in enumerate(mounts)
-         for pi in range(procs)], clients, procs, weight=ios))
+        def make(i):
+            def op():
+                if system == "cfs":
+                    if i == 0:
+                        state["fd"] = mnt.open(path, O_RDONLY)
+                    mnt.read(state["fd"], SEQ_IO)
+                    if i == ios - 1:
+                        mnt.close(state["fd"])
+                else:
+                    mnt.read_range(path, i * SEQ_IO, SEQ_IO)
+            return op
+        return (make(i) for i in range(ios))
+    if want("SeqRead"):
+        results.append(run_streams(
+            "SeqRead", system, net,
+            [(_cid(m), sr(m, ci, pi)) for ci, m in enumerate(mounts)
+             for pi in range(procs)], clients, procs))
 
     # --- random read: 4K pread at random offsets (fd kept open, like fio) ---
     def rr(mnt, ci, pi):
@@ -94,10 +132,11 @@ def bench_large(system: str, cluster, clients: int, procs: int
             return [make(o) for o in offs]
         return [lambda o=o, mnt=mnt: mnt.read_range(path, o, RAND_IO)
                 for o in offs]
-    results.append(run_streams(
-        "RandRead", system, net,
-        [(_cid(m), rr(m, ci, pi)) for ci, m in enumerate(mounts)
-         for pi in range(procs)], clients, procs))
+    if want("RandRead"):
+        results.append(run_streams(
+            "RandRead", system, net,
+            [(_cid(m), rr(m, ci, pi)) for ci, m in enumerate(mounts)
+             for pi in range(procs)], clients, procs))
 
     # --- random write: 4K in-place pwrite (fd kept open) ---------------------
     def rw(mnt, ci, pi):
@@ -116,21 +155,42 @@ def bench_large(system: str, cluster, clients: int, procs: int
             return [make(o) for o in offs]
         return [lambda o=o, mnt=mnt: mnt.overwrite(path, o, data)
                 for o in offs]
-    results.append(run_streams(
-        "RandWrite", system, net,
-        [(_cid(m), rw(m, ci, pi)) for ci, m in enumerate(mounts)
-         for pi in range(procs)], clients, procs))
+    if want("RandWrite"):
+        results.append(run_streams(
+            "RandWrite", system, net,
+            [(_cid(m), rw(m, ci, pi)) for ci, m in enumerate(mounts)
+             for pi in range(procs)], clients, procs))
     return results
 
 
-def run(out_rows: List[str]) -> None:
+def run(out_rows: List[str], smoke: bool = False) -> List[dict]:
     # Fig. 8: single client, procs sweep; Fig. 9: multi-client
+    single = (2,) if smoke else (1, 8, 32)
+    multi = (2,) if smoke else (4, 8)
+    multi_procs = 4 if smoke else 16
+    results: List[BenchResult] = []
     for system, factory in (("cfs", make_cfs), ("ceph", make_ceph)):
-        for procs in (1, 8, 32):
-            cluster = factory()
-            for r in bench_large(system, cluster, 1, procs):
-                out_rows.append(r.row())
-        for clients in (4, 8):
-            cluster = factory()
-            for r in bench_large(system, cluster, clients, 16):
-                out_rows.append(r.row())
+        for procs in single:
+            cluster = factory(4 if smoke else 10)
+            results.extend(bench_large(system, cluster, 1, procs))
+        for clients in multi:
+            cluster = factory(4 if smoke else 10)
+            results.extend(bench_large(system, cluster, clients, multi_procs))
+    # pipeline A/B (EXPERIMENTS.md §Pipelined appends): the in-flight window
+    # vs the synchronous per-packet path, same seed/cluster, 25 GbE profile —
+    # "cfs-sync" is the engine with CfsClient.pipeline_depth = 0.  The sweep
+    # spans the latency-bound regime (big IOPS gain) through data-NIC
+    # saturation (IOPS converges to capacity, p50 still drops ~4x)
+    ab_configs = [(1, 4)] if smoke else [(1, 4), (1, 16), (4, 16), (8, 16)]
+    for clients, procs in ab_configs:
+        # depths pinned explicitly: the rows must stay a true A/B even when
+        # the developer-facing CFS_PIPELINE_DEPTH env override is set
+        for label, depth in (("cfs-sync", 0), ("cfs", 8)):
+            cluster = make_cfs_fast(4 if smoke else 10)
+            for r in bench_large("cfs", cluster, clients, procs,
+                                 only={"SeqWrite"}, pipeline_depth=depth):
+                r.name = "SeqWrite25ge"
+                r.system = label
+                results.append(r)
+    out_rows.extend(r.row() for r in results)
+    return [r.json_obj() for r in results]

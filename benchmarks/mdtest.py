@@ -19,10 +19,11 @@ TREE_DEPTH = 4           # TreeCreation/Removal: branching-2 tree of dirs
 TREE_BRANCH = 2
 
 
-def make_cfs(n_nodes: int = 10):
+def make_cfs(n_nodes: int = 10, latency=None):
     c = CfsCluster(n_meta=n_nodes, n_data=n_nodes,
                    meta_mem_capacity=512 * 1024 * 1024,
-                   extent_max_size=8 * 1024 * 1024, seed=42)
+                   extent_max_size=8 * 1024 * 1024, seed=42,
+                   latency=latency)
     c.create_volume("bench", n_meta_partitions=n_nodes,
                     n_data_partitions=3 * n_nodes)
     return c
@@ -92,8 +93,8 @@ def bench_mdtest(system: str, cluster, clients: int, procs: int
 
     # --- DirCreation: per-proc unique dirs under a SHARED parent ----------
     def dc(mnt, ci, pi):
-        return [lambda i=i, ci=ci, pi=pi, mnt=mnt:
-                mnt.mkdir(f"{base}/d{ci}_{pi}_{i}") for i in range(ITEMS)]
+        return (lambda i=i, ci=ci, pi=pi, mnt=mnt:
+                mnt.mkdir(f"{base}/d{ci}_{pi}_{i}") for i in range(ITEMS))
     results.append(run_streams("DirCreation", system, net,
                                _streams_for(mounts, procs, dc),
                                clients, procs))
@@ -105,7 +106,7 @@ def bench_mdtest(system: str, cluster, clients: int, procs: int
         creat_file(mounts[0], f"{stat_dir}/f{i}")
 
     def ds(mnt, ci, pi):
-        return [lambda mnt=mnt: dir_stat(mnt, stat_dir) for _ in range(4)]
+        return (lambda mnt=mnt: dir_stat(mnt, stat_dir) for _ in range(4))
     # each dir_stat touches 64 files: weight reports per-FILE-stat IOPS
     results.append(run_streams("DirStat", system, net,
                                _streams_for(mounts, procs, ds),
@@ -113,25 +114,25 @@ def bench_mdtest(system: str, cluster, clients: int, procs: int
 
     # --- DirRemoval ----------------------------------------------------------
     def dr(mnt, ci, pi):
-        return [lambda i=i, ci=ci, pi=pi, mnt=mnt:
-                mnt.rmdir(f"{base}/d{ci}_{pi}_{i}") for i in range(ITEMS)]
+        return (lambda i=i, ci=ci, pi=pi, mnt=mnt:
+                mnt.rmdir(f"{base}/d{ci}_{pi}_{i}") for i in range(ITEMS))
     results.append(run_streams("DirRemoval", system, net,
                                _streams_for(mounts, procs, dr),
                                clients, procs))
 
     # --- FileCreation ----------------------------------------------------------
     def fc(mnt, ci, pi):
-        return [lambda i=i, ci=ci, pi=pi, mnt=mnt:
+        return (lambda i=i, ci=ci, pi=pi, mnt=mnt:
                 creat_file(mnt, f"{base}/f{ci}_{pi}_{i}")
-                for i in range(ITEMS)]
+                for i in range(ITEMS))
     results.append(run_streams("FileCreation", system, net,
                                _streams_for(mounts, procs, fc),
                                clients, procs))
 
     # --- FileRemoval -------------------------------------------------------------
     def fr(mnt, ci, pi):
-        return [lambda i=i, ci=ci, pi=pi, mnt=mnt:
-                mnt.unlink(f"{base}/f{ci}_{pi}_{i}") for i in range(ITEMS)]
+        return (lambda i=i, ci=ci, pi=pi, mnt=mnt:
+                mnt.unlink(f"{base}/f{ci}_{pi}_{i}") for i in range(ITEMS))
     results.append(run_streams("FileRemoval", system, net,
                                _streams_for(mounts, procs, fr),
                                clients, procs))
@@ -179,16 +180,17 @@ def bench_mdtest(system: str, cluster, clients: int, procs: int
     return results
 
 
-def run(out_rows: List[str]) -> None:
+def run(out_rows: List[str], smoke: bool = False) -> List[dict]:
     # Fig. 6: single client, procs sweep; Fig. 7/Table 3: clients x 64 procs
-    single = [1, 4, 16, 64]
-    multi = [(2, 64), (4, 64), (8, 64)]
+    single = [2] if smoke else [1, 4, 16, 64]
+    multi = [(2, 4)] if smoke else [(2, 64), (4, 64), (8, 64)]
+    results: List[BenchResult] = []
     for system, factory in (("cfs", make_cfs), ("ceph", make_ceph)):
         for procs in single:
-            cluster = factory()
-            for r in bench_mdtest(system, cluster, 1, procs):
-                out_rows.append(r.row())
+            cluster = factory(4 if smoke else 10)
+            results.extend(bench_mdtest(system, cluster, 1, procs))
         for clients, procs in multi:
-            cluster = factory()
-            for r in bench_mdtest(system, cluster, clients, procs):
-                out_rows.append(r.row())
+            cluster = factory(4 if smoke else 10)
+            results.extend(bench_mdtest(system, cluster, clients, procs))
+    out_rows.extend(r.row() for r in results)
+    return [r.json_obj() for r in results]

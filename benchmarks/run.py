@@ -1,10 +1,14 @@
 """Benchmark driver — one suite per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--suite mdtest|largefile|smallfile|expansion|roofline]
+                                            [--smoke]
 
-Prints CSV rows (test,system,clients,procs,ops,sim_iops,wall_us_per_op,...)
-and writes results/bench/<suite>.csv.  The roofline suite summarizes the
-dry-run artifacts in results/dryrun/ (§Roofline inputs)."""
+Prints CSV rows (test,system,clients,procs,ops,sim_iops,...,p99_us,...),
+writes results/bench/<suite>.csv, and drops a machine-readable perf
+trajectory BENCH_<suite>.json at the repo root (simulated-time fields only,
+so same-seed reruns are bit-identical — see EXPERIMENTS.md for the schema).
+``--smoke`` shrinks every sweep to a <30 s run for CI drift detection.
+The roofline suite summarizes the dry-run artifacts in results/dryrun/."""
 
 from __future__ import annotations
 
@@ -13,18 +17,19 @@ import json
 import sys
 from pathlib import Path
 
-RESULTS = Path(__file__).resolve().parents[1] / "results" / "bench"
+ROOT = Path(__file__).resolve().parents[1]
+RESULTS = ROOT / "results" / "bench"
 
 
-def run_suite(name: str, rows: list) -> None:
+def run_suite(name: str, rows: list, smoke: bool) -> list:
     from . import expansion, largefile, mdtest, smallfile
     mod = {"mdtest": mdtest, "largefile": largefile,
            "smallfile": smallfile, "expansion": expansion}[name]
-    mod.run(rows)
+    return mod.run(rows, smoke=smoke)
 
 
 def roofline_summary(rows: list) -> None:
-    dry = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+    dry = ROOT / "results" / "dryrun"
     rows.append("# arch,shape,mesh,ok,compute_s,memory_s,collective_s,"
                 "dominant,model_hlo_ratio")
     from repro.configs import get_arch, get_shape
@@ -53,6 +58,8 @@ def main() -> None:
     ap.add_argument("--suite", default="all",
                     choices=["all", "mdtest", "largefile", "smallfile",
                              "expansion", "roofline"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny op counts (<30 s total) for CI drift checks")
     args = ap.parse_args()
     RESULTS.mkdir(parents=True, exist_ok=True)
 
@@ -61,15 +68,26 @@ def main() -> None:
     from .common import HEADER
     for suite in suites:
         rows: list = []
+        json_results: list = []
         print(f"=== suite: {suite} ===")
         if suite == "roofline":
             roofline_summary(rows)
         else:
             rows.insert(0, HEADER)
-            run_suite(suite, rows)
+            json_results = run_suite(suite, rows, args.smoke)
         for row in rows:
             print(row)
-        (RESULTS / f"{suite}.csv").write_text("\n".join(rows) + "\n")
+        # smoke runs go to a side path: they must never clobber the
+        # committed full-sweep baselines (csv + BENCH_*.json)
+        suffix = ".smoke.csv" if args.smoke else ".csv"
+        (RESULTS / f"{suite}{suffix}").write_text("\n".join(rows) + "\n")
+        if suite == "roofline":
+            continue            # roofline has no BenchResult trajectory
+        payload = {"suite": suite, "smoke": args.smoke,
+                   "results": json_results}
+        name = f"BENCH_{suite}.smoke.json" if args.smoke else f"BENCH_{suite}.json"
+        out = (RESULTS if args.smoke else ROOT) / name
+        out.write_text(json.dumps(payload, indent=1, sort_keys=True) + "\n")
 
 
 if __name__ == "__main__":

@@ -22,14 +22,14 @@ def bench_small(system: str, cluster, clients: int, procs: int,
     data = bytes(size)
 
     def wr(mnt, ci, pi):
-        return [lambda i=i, mnt=mnt, ci=ci, pi=pi:
+        return (lambda i=i, mnt=mnt, ci=ci, pi=pi:
                 creat_file(mnt, f"/sf{size}_{ci}_{pi}_{i}", data)
-                for i in range(N_FILES)]
+                for i in range(N_FILES))
 
     def rd(mnt, ci, pi):
-        return [lambda i=i, mnt=mnt, ci=ci, pi=pi:
+        return (lambda i=i, mnt=mnt, ci=ci, pi=pi:
                 read_whole(mnt, f"/sf{size}_{ci}_{pi}_{i}")
-                for i in range(N_FILES)]
+                for i in range(N_FILES))
 
     r_w = run_streams(f"SmallWrite_{size // 1024}K", system, net,
                       [(_cid(m), wr(m, ci, pi)) for ci, m in enumerate(mounts)
@@ -40,10 +40,13 @@ def bench_small(system: str, cluster, clients: int, procs: int,
     return [r_w, r_r]
 
 
-def run(out_rows: List[str]) -> None:
-    clients, procs = 8, 16       # scaled from the paper's 8 x 64
+def run(out_rows: List[str], smoke: bool = False) -> List[dict]:
+    clients, procs = (2, 2) if smoke else (8, 16)   # scaled from 8 x 64
+    sizes = SIZES[:1] if smoke else SIZES
+    results: List[BenchResult] = []
     for system, factory in (("cfs", make_cfs), ("ceph", make_ceph)):
-        for size in SIZES:
-            cluster = factory()
-            for r in bench_small(system, cluster, clients, procs, size):
-                out_rows.append(r.row())
+        for size in sizes:
+            cluster = factory(4 if smoke else 10)
+            results.extend(bench_small(system, cluster, clients, procs, size))
+    out_rows.extend(r.row() for r in results)
+    return [r.json_obj() for r in results]

@@ -9,7 +9,8 @@ Public surface:
 
 from .client import CfsClient, CfsFile, FsError, NotFound, Exists
 from .fs import CfsCluster, CfsMount
-from .simnet import LatencyModel, Network, SimClock
+from .simnet import (EventScheduler, LatencyModel, Network, Resource,
+                     SimClock)
 from .types import PACKET_SIZE, SMALL_FILE_THRESHOLD
 from .vfs import (CfsOSError, CfsVfs, O_ACCMODE, O_APPEND, O_CREAT, O_EXCL,
                   O_RDONLY, O_RDWR, O_TRUNC, O_WRONLY)
@@ -19,6 +20,6 @@ __all__ = [
     "FsError", "NotFound", "Exists",
     "O_RDONLY", "O_WRONLY", "O_RDWR", "O_ACCMODE",
     "O_CREAT", "O_EXCL", "O_TRUNC", "O_APPEND",
-    "LatencyModel", "Network", "SimClock",
+    "EventScheduler", "LatencyModel", "Network", "Resource", "SimClock",
     "PACKET_SIZE", "SMALL_FILE_THRESHOLD",
 ]

@@ -22,7 +22,9 @@ asynchronous (mark, evict, punch holes / drop extents).
 
 from __future__ import annotations
 
+import os
 import random
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -38,6 +40,12 @@ __all__ = ["CfsClient", "CfsFile", "FsError", "NotFound", "Exists",
            "NotADirectory", "IsADirectory", "DirNotEmpty"]
 
 MAX_RETRIES = 4
+
+# Sequential-write pipelining (§2.7): how many ≤128 KB packets a client
+# keeps in flight down the replica chain before it must wait for the oldest
+# ack.  0 disables the window (the seed's one-synchronous-round-trip-per-
+# packet path, kept for A/B benchmarking via CFS_PIPELINE_DEPTH=0).
+PIPELINE_DEPTH = int(os.environ.get("CFS_PIPELINE_DEPTH", "8"))
 
 
 class FsError(Exception):
@@ -94,6 +102,7 @@ class CfsClient:
         self.volume = volume
         self.rng = random.Random(rng_seed)
         self._seq = 0
+        self.pipeline_depth = PIPELINE_DEPTH
         # coalesce colocated metadata mutations into one partition round-trip
         # (λFS/AsyncFS-style batched RPCs); off = the scatter path the paper's
         # Fig. 3 workflows describe step by step
@@ -201,9 +210,14 @@ class CfsClient:
         if not dps:
             # volume ran out of writable partitions — the RM auto-expands
             # (§2.3.1 "automatically adds a set of new partitions")
-            leader = self.rm.leader_id()
-            self.net.call(self.client_id, leader, self.rm.check_volumes,
-                          kind="client.rm")
+            try:
+                leader = self.rm.leader_id()
+                self.net.call(self.client_id, leader, self.rm.check_volumes,
+                              kind="client.rm")
+            except (NetError, RuntimeError):
+                # RM unreachable or out of allocatable nodes: stay in the
+                # client's error channel, don't leak the RM internals
+                pass
             self.sync_partitions()
             dps = [dp for dp in self.data_partitions if dp.status == "rw"]
         if not dps:
@@ -300,9 +314,12 @@ class CfsClient:
                 continue
         # every cached partition is full: ask the RM to split / expand,
         # resync the routing table, then retry across the fresh view
-        leader = self.rm.leader_id()
-        self.net.call(self.client_id, leader, self.rm.check_volumes,
-                      kind="client.rm")
+        try:
+            leader = self.rm.leader_id()
+            self.net.call(self.client_id, leader, self.rm.check_volumes,
+                          kind="client.rm")
+        except (NetError, RuntimeError):
+            pass        # RM can't help; the retry below reports the truth
         self.sync_partitions()
         mps = self._writable_mps()
         self.rng.shuffle(mps)
@@ -645,14 +662,33 @@ class CfsClient:
         return CfsFile(self, inode, mode)
 
     # -- internal write paths used by CfsFile
+    def drain_window(self, window: List[float]) -> None:
+        """fsync barrier over a pipelined append window: the caller's
+        virtual time advances to the last in-flight packet's chain ack (the
+        commit point of the highest offset implies every earlier packet's
+        prefix is committed, so one wait covers the whole window)."""
+        if window:
+            op = self.net.current_op
+            if op is not None and op.timed:
+                op.advance_to(max(window))
+            window.clear()
+
     def _append_packets(self, data: bytes,
-                        state: Optional[Tuple[int, int, int]] = None
+                        state: Optional[Tuple[int, int, int]] = None,
+                        window: Optional[List[float]] = None
                         ) -> Tuple[List[ExtentKey], Tuple[int, int, int]]:
         """Stream ``data`` as ≤128 KB packets (Fig. 4).  ``state`` carries
         (partition_id, extent_id, extent_write_offset) across calls so a file
         keeps appending to its current extent.  Returns new extent keys and
         the updated state.  On partition failure the remaining k−p bytes are
-        re-sent to a NEW extent on a different partition (§2.2.5)."""
+        re-sent to a NEW extent on a different partition (§2.2.5).
+
+        Under a *timed* op with ``window`` supplied, packets are pipelined:
+        the client's frontier only advances to the moment the request left
+        its NIC, the chain ack time is parked in ``window`` (bounded to
+        ``pipeline_depth`` in-flight packets), and ``drain_window`` is the
+        fsync barrier.  Any failed/short commit stalls the pipeline: the
+        client must drain before it can decide what to re-send where."""
         keys: List[ExtentKey] = []
         pos = 0
         if state is None:
@@ -661,9 +697,20 @@ class CfsClient:
             state = (dp.pid, eid, 0)
         pid, eid, eoff = state
         zero_progress = 0
+        op = self.net.current_op
+        pipelined = (window is not None and op is not None and op.timed
+                     and self.pipeline_depth > 0)
         while pos < len(data):
             packet = data[pos : pos + PACKET_SIZE]
             dp = self._dp(pid)
+            pkt_op: Optional[Any] = None
+            if pipelined:
+                send_at = op.now_us
+                if len(window) >= self.pipeline_depth:
+                    # window full: wait for the oldest in-flight ack (chain
+                    # FIFO ⇒ acks arrive in send order)
+                    send_at = max(send_at, window.pop(0))
+                pkt_op = self.net.begin_op(at=send_at)
             try:
                 res = self._data_call(dp, "serve_append", eid, eoff, packet,
                                       True, nbytes=len(packet) + 128)
@@ -672,12 +719,30 @@ class CfsClient:
                 if "full" in str(e):
                     # extent reached its size cap — healthy; roll to a fresh
                     # extent on the same partition, no fault report
+                    if pkt_op is not None:
+                        self.net.end_op()
+                        op.advance_to(pkt_op.now_us)   # client saw the NAK
                     eid = self._new_extent_id(dp)
                     eoff = 0
                     continue
                 accepted = 0
             except (NetError, FsError):
                 accepted = 0
+            finally:
+                if pkt_op is not None and self.net.current_op is pkt_op:
+                    self.net.end_op()
+            if pkt_op is not None:
+                if accepted >= len(packet):
+                    # full commit: the client moves on as soon as its NIC is
+                    # free; the chain ack completes in the background
+                    window.append(pkt_op.now_us)
+                    op.advance_to(pkt_op.tx_done_us)
+                else:
+                    # short/failed commit: pipeline stall — the client only
+                    # learns the committed offset from the (late) ack, and
+                    # must drain everything in flight before re-routing
+                    op.advance_to(pkt_op.now_us)
+                    self.drain_window(window)
             if accepted > 0:
                 keys.append(ExtentKey(pid, eid, -1, eoff, accepted))
                 eoff += accepted
@@ -709,9 +774,12 @@ class CfsClient:
 
     def _new_extent_id(self, dp: _DataPartition) -> int:
         """Client-generated unique extent id (partition-scoped uniqueness is
-        what matters; ids are chosen so clients never collide)."""
+        what matters; ids are chosen so clients never collide).  crc32, not
+        ``hash()``: builtin str hashing is salted per process and would break
+        bit-identical same-seed reruns."""
         CfsClient._extent_counter += 1
-        return (hash(self.client_id) & 0xFFFF) * 1_000_000 + CfsClient._extent_counter
+        return ((zlib.crc32(self.client_id.encode()) & 0xFFFF) * 1_000_000
+                + CfsClient._extent_counter)
 
     def _write_small_file(self, data: bytes) -> List[ExtentKey]:
         for _ in range(2 * MAX_RETRIES):
@@ -825,6 +893,9 @@ class CfsFile:
         self._extents: List[ExtentKey] = [ExtentKey(*e) for e in inode["extents"]]
         self._size = inode["size"]
         self._dirty = False
+        # chain-ack times of pipelined in-flight packets (virtual us); an
+        # fsync/read barrier drains this via CfsClient.drain_window
+        self._inflight: List[float] = []
 
     # ---- write ---------------------------------------------------------------
     def write(self, data: bytes) -> int:
@@ -860,7 +931,7 @@ class CfsFile:
         chunk = bytes(self._buf[:cut])
         del self._buf[:cut]
         keys, self._stream_state = self.client._append_packets(
-            chunk, self._stream_state)
+            chunk, self._stream_state, window=self._inflight)
         foff = self._buf_start
         for k in keys:
             k.file_offset = foff
@@ -870,7 +941,11 @@ class CfsFile:
         self._size = max(self._size, foff)
 
     def _write_random(self, data: bytes) -> None:
-        """Fig. 5: split into overwrite (in-place, raft) + append parts."""
+        """Fig. 5: split into overwrite (in-place, raft) + append parts.
+        An overwrite may target bytes whose append ack is still in flight —
+        barrier first (committed-offset rule: nothing may be overwritten
+        before its append commit is known)."""
+        self.client.drain_window(self._inflight)
         overlap = min(self._size - self.pos, len(data))
         if overlap > 0:
             self._overwrite_range(self.pos, data[:overlap])
@@ -910,6 +985,8 @@ class CfsFile:
     # ---- read ------------------------------------------------------------------
     def read(self, size: int = -1) -> bytes:
         self.flush()
+        # read-your-writes: a read behind the window waits for the acks
+        self.client.drain_window(self._inflight)
         inode = {"size": self._size,
                  "extents": [k.as_tuple() for k in self._extents]}
         if size < 0:
@@ -927,6 +1004,7 @@ class CfsFile:
         hole that reads back as zeros.  Buffered appends are flushed FIRST so
         the trim operates on the real extent map — the in-flight buffer used
         to be dropped silently, which corrupted truncate-to-nonzero."""
+        self.client.drain_window(self._inflight)   # never punch under the window
         if size == 0:
             # everything goes — no point making the buffer durable first
             if self._extents:
@@ -940,6 +1018,7 @@ class CfsFile:
             self._dirty = True
             return
         self.flush()
+        self.client.drain_window(self._inflight)
         if size < self._size:
             kept: List[ExtentKey] = []
             dropped: List[ExtentKey] = []
@@ -985,8 +1064,11 @@ class CfsFile:
                 self._flush_full_packets(force=True)
 
     def fsync(self) -> None:
-        """fsync(): flush data AND synchronize the meta node (§2.7.1)."""
+        """fsync(): flush data, drain the pipeline window (the barrier — a
+        durable ack for the highest offset implies the whole committed
+        prefix, §2.2.2), THEN synchronize the meta node (§2.7.1)."""
         self.flush()
+        self.client.drain_window(self._inflight)
         if self._dirty:
             self.inode = self.client.update_extents(
                 self.inode["inode"], self._size, self._extents)

@@ -115,7 +115,13 @@ class DataPartitionReplica:
             raise ExtentError(f"partition {self.partition_id} is {self.status}")
         if create and not self.store.has(extent_id):
             self.store.create_extent(extent_id=extent_id)
-        my_size = self.store.append(extent_id, offset, data, self.node.op())
+        # the local media write and the chain forward proceed concurrently:
+        # the ack only needs both done, not one after the other
+        op = self.node.op()
+        fork = op.fork() if op is not None and op.timed else None
+        my_size = self.store.append(extent_id, offset, data, op)
+        if fork is not None:
+            fork.branch_done()
         acks = self.acked_sizes.setdefault(extent_id, {})
         acks[self.node.node_id] = my_size
         # forward down the chain
@@ -133,6 +139,8 @@ class DataPartitionReplica:
                     acks[nid] = size
             except (NetError, ExtentError):
                 chain_ok = False
+        if fork is not None:
+            fork.join()
         if not chain_ok or any(nid not in acks for nid in self.replicas):
             # §2.3.3: a replica timed out -> mark remaining replicas read-only;
             # the committed prefix stays serveable, the tail is resent elsewhere.
@@ -143,10 +151,15 @@ class DataPartitionReplica:
 
     def chain_write(self, extent_id: int, offset: int, data: bytes,
                     create: bool, rest: List[str]) -> Dict[str, int]:
-        """Backup-side: write locally, forward to the rest of the chain."""
+        """Backup-side: write locally while forwarding to the rest of the
+        chain (cut-through, like the leader)."""
         if create and not self.store.has(extent_id):
             self.store.create_extent(extent_id=extent_id)
-        my_size = self.store.append(extent_id, offset, data, self.node.op())
+        op = self.node.op()
+        fork = op.fork() if op is not None and op.timed else None
+        my_size = self.store.append(extent_id, offset, data, op)
+        if fork is not None:
+            fork.branch_done()
         sizes = {self.node.node_id: my_size}
         if rest:
             nxt = rest[0]
@@ -156,6 +169,8 @@ class DataPartitionReplica:
                 self.partition_id, extent_id, offset, data, create, rest[1:],
                 nbytes=len(data) + 128, kind="pb.append",
             ))
+        if fork is not None:
+            fork.join()
         return sizes
 
     def leader_small_write(self, data: bytes) -> Tuple[int, int, int]:

@@ -1,17 +1,29 @@
-"""Simulated cluster substrate: virtual clock, network, disks.
+"""Simulated cluster substrate: discrete-event clock, network, disks.
 
 CFS is a multi-node system; this container is one CPU box.  The protocols
 (raft, chain replication, committed offsets, placement) run as real code —
-only the transport is simulated.  Three pieces:
+only the transport is simulated.  Pieces:
 
-* ``SimClock`` — a virtual clock in microseconds.  Benchmarks advance it by
-  the modeled cost of each operation; unit tests mostly ignore it.
+* ``SimClock`` — a virtual clock in microseconds.
+* ``EventScheduler`` — a discrete-event loop on a ``SimClock``: a stable
+  min-heap of ``(time, seq, callback)`` events.  Benchmarks schedule op
+  dispatches here; firing order is deterministic (time, then insertion
+  order) so same-seed runs replay bit-identically.
+* ``Resource`` — a work-conserving single-server service queue (one per
+  NIC, one per disk).  ``acquire(t, service)`` grants the earliest idle
+  interval at or after ``t`` and returns when the job leaves the server,
+  so overlapping requests from concurrent ops pay real queueing delay
+  (FIFO head-of-line when saturated) instead of the old bottleneck bound.
 * ``Network`` — routes RPCs between node ids.  Every call charges latency to
   the *current operation context* (an ``OpTimer``), records traffic, and can
   inject faults: dropped messages, partitions, dead nodes.  Calls are
-  synchronous Python calls (deterministic, easy to test); latency is *modeled*
-  rather than slept.
-* ``Disk`` — capacity + IO cost accounting per node.
+  synchronous Python calls (deterministic, easy to test).  Untimed ops keep
+  the seed's additive cost model; ops opened with ``begin_op(at=t)`` are
+  *timed*: their virtual completion frontier advances through per-node NIC
+  and disk service queues, which is what produces queueing delay, packet
+  pipelining, and tail latency under contention.
+* ``Disk`` — capacity + IO cost accounting per node; timed ops queue on the
+  disk's ``Resource``.
 
 Timer-driven protocols (raft elections/heartbeats) are tick-driven, the same
 way etcd-raft is tested: the driver calls ``tick()`` explicitly.
@@ -19,12 +31,16 @@ way etcd-raft is tested: the driver calls ``tick()`` explicitly.
 
 from __future__ import annotations
 
+import bisect
+import heapq
 import random
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
 __all__ = [
     "SimClock",
+    "EventScheduler",
+    "Resource",
     "NetError",
     "NodeDown",
     "Partitioned",
@@ -70,6 +86,118 @@ class SimClock:
         return self.now_us
 
 
+class EventScheduler:
+    """Deterministic discrete-event loop over a :class:`SimClock`.
+
+    Events are ``(time, seq, fn, args)``; ``seq`` is a monotonically
+    increasing insertion counter, so ties in virtual time fire in schedule
+    order — stable, seed-independent tie-breaking.  Callbacks receive the
+    fire time as their first argument and may schedule further events."""
+
+    def __init__(self, clock: Optional[SimClock] = None):
+        self.clock = clock or SimClock()
+        self._heap: List[Tuple[float, int, Callable[..., Any], tuple]] = []
+        self._seq = 0
+        self.fired = 0
+
+    def at(self, t_us: float, fn: Callable[..., Any], *args: Any) -> None:
+        """Schedule ``fn(t, *args)`` at absolute virtual time ``t_us``."""
+        heapq.heappush(self._heap, (t_us, self._seq, fn, args))
+        self._seq += 1
+
+    def after(self, dt_us: float, fn: Callable[..., Any], *args: Any) -> None:
+        self.at(self.clock.now() + dt_us, fn, *args)
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def peek_time(self) -> Optional[float]:
+        return self._heap[0][0] if self._heap else None
+
+    def run(self, until_us: Optional[float] = None) -> float:
+        """Fire events in (time, seq) order; returns the final clock time.
+
+        The clock never moves backwards: an event scheduled in the past
+        (e.g. at a resource's earlier free slot) fires at the current time."""
+        while self._heap:
+            if until_us is not None and self._heap[0][0] > until_us:
+                break
+            t, _, fn, args = heapq.heappop(self._heap)
+            self.clock.now_us = max(self.clock.now_us, t)
+            self.fired += 1
+            fn(t, *args)
+        return self.clock.now_us
+
+
+class Resource:
+    """Single-server service queue — one NIC port, one disk spindle.
+
+    Jobs arrive at time ``t`` with a service demand; the server is
+    work-conserving: the job occupies the *earliest idle interval* of
+    length ``service_us`` at or after ``t`` (earliest-fit).  When the
+    server is saturated this degenerates to FIFO head-of-line blocking;
+    when it is idle around ``t`` the job backfills into the gap, so an
+    op dispatched earlier on the event heap cannot serialize a whole
+    call chain's worth of *propagation* time into the server — only real
+    occupancy queues.  Busy intervals are kept as a sorted disjoint list
+    (merged when touching); every operation is deterministic.
+
+    Tracks total busy and queueing time so benchmarks can name the
+    bottleneck resource."""
+
+    __slots__ = ("name", "_starts", "_ends", "busy_us", "queued_us", "jobs")
+
+    def __init__(self, name: str = ""):
+        self.name = name
+        self._starts: List[float] = []   # busy intervals [start, end)
+        self._ends: List[float] = []
+        self.busy_us = 0.0
+        self.queued_us = 0.0
+        self.jobs = 0
+
+    @property
+    def free_at(self) -> float:
+        """End of the last scheduled busy interval (diagnostics)."""
+        return self._ends[-1] if self._ends else 0.0
+
+    def acquire(self, t_arrive: float, service_us: float) -> float:
+        """Occupy the server for ``service_us`` starting no earlier than
+        ``t_arrive``; returns the departure time."""
+        self.jobs += 1
+        self.busy_us += service_us
+        if service_us <= 0:
+            return t_arrive
+        starts, ends = self._starts, self._ends
+        # first busy interval ending after the arrival
+        i = bisect.bisect_right(ends, t_arrive)
+        cand = t_arrive
+        while i < len(starts) and starts[i] < cand + service_us:
+            cand = ends[i]           # gap too small — skip past this interval
+            i += 1
+        end = cand + service_us
+        self.queued_us += cand - t_arrive
+        merge_left = i > 0 and ends[i - 1] == cand
+        merge_right = i < len(starts) and starts[i] == end
+        if merge_left and merge_right:
+            ends[i - 1] = ends[i]
+            del starts[i], ends[i]
+        elif merge_left:
+            ends[i - 1] = end
+        elif merge_right:
+            starts[i] = cand
+        else:
+            starts.insert(i, cand)
+            ends.insert(i, end)
+        return end
+
+    def reset(self) -> None:
+        self._starts.clear()
+        self._ends.clear()
+        self.busy_us = 0.0
+        self.queued_us = 0.0
+        self.jobs = 0
+
+
 @dataclass
 class LatencyModel:
     """Cost model for one network hop / one disk op (all microseconds)."""
@@ -87,24 +215,76 @@ class LatencyModel:
 
 
 class OpTimer:
-    """Accumulates the modeled latency of one logical operation.
+    """The modeled latency of one logical operation as a point on the
+    virtual timeline.
 
-    Sequential costs add; parallel fan-out (raft leader -> followers) takes the
-    max of the branches via ``parallel()``.
+    An op starts at ``start_us`` and its completion frontier ``now_us``
+    advances as it consumes network hops and service time; ``us`` (the
+    seed's additive accumulator) is now the derived elapsed time.  Untimed
+    ops (``begin_op()`` with no start) behave exactly like the seed: costs
+    add, nothing queues.  *Timed* ops (``begin_op(at=t)``) additionally
+    queue on per-node :class:`Resource` timelines inside ``Network.call``
+    and ``Disk.write_cost``/``read_cost``, which is where queueing delay
+    and pipelining overlap come from.
+
+    Sequential costs add; parallel fan-out (raft leader -> followers) takes
+    the max of the branches via ``parallel()`` or a ``fork()``.
     """
 
-    def __init__(self) -> None:
-        self.us: float = 0.0
+    def __init__(self, start_us: float = 0.0, timed: bool = False) -> None:
+        self.start_us: float = start_us
+        self.now_us: float = start_us
+        self.timed = timed
         self.msgs: int = 0
         self.bytes: int = 0
         self.disk_ops: int = 0
+        # departure time of this op's outermost request from its source NIC
+        # (a pipelined client is free to send the next packet at this point,
+        # long before the chain ack arrives)
+        self.tx_done_us: float = start_us
+        self._depth: int = 0            # net.call nesting depth
+
+    @property
+    def us(self) -> float:
+        return self.now_us - self.start_us
 
     def add(self, us: float) -> None:
-        self.us += us
+        self.now_us += us
+
+    def advance_to(self, t_us: float) -> None:
+        if t_us > self.now_us:
+            self.now_us = t_us
 
     def parallel(self, branch_costs: List[float]) -> None:
         if branch_costs:
-            self.us += max(branch_costs)
+            self.now_us += max(branch_costs)
+
+    def fork(self) -> "_OpFork":
+        """Split the timeline: branches recorded with ``branch_done()`` all
+        start at the current frontier; ``join()`` resumes at the max."""
+        return _OpFork(self)
+
+
+class _OpFork:
+    """Helper for concurrent branches of one op (local disk write happening
+    while the packet is forwarded down the chain, fan-out RPCs, ...)."""
+
+    __slots__ = ("op", "t0", "ends")
+
+    def __init__(self, op: OpTimer):
+        self.op = op
+        self.t0 = op.now_us
+        self.ends: List[float] = []
+
+    def branch_done(self) -> None:
+        """Record the current branch's end; rewind to the fork point."""
+        self.ends.append(self.op.now_us)
+        self.op.now_us = self.t0
+
+    def join(self) -> None:
+        """Resume the op at the latest branch end (the running timeline is
+        the final implicit branch)."""
+        self.op.now_us = max([self.op.now_us] + self.ends)
 
 
 class Disk:
@@ -141,27 +321,30 @@ class Disk:
     def release(self, nbytes: int) -> None:
         self.used = max(0, self.used - nbytes)
 
-    def write_cost(self, nbytes: int, op: Optional[OpTimer] = None) -> float:
-        self.writes += 1
-        self.write_bytes += nbytes
+    def _charge(self, nbytes: int, op: Optional[OpTimer]) -> float:
         c = self.model.disk_cost(nbytes)
         if op is not None:
-            op.add(c)
+            if op.timed and self.net is not None and self.owner:
+                # the disk is a FIFO resource separate from the node's NIC:
+                # concurrent ops queue here instead of overlapping for free
+                res = self.net.resource(f"disk:{self.owner}")
+                op.now_us = res.acquire(op.now_us, c)
+            else:
+                op.add(c)
             op.disk_ops += 1
         if self.net is not None and self.owner:
             self.net.charge_busy(self.owner, c)
         return c
 
+    def write_cost(self, nbytes: int, op: Optional[OpTimer] = None) -> float:
+        self.writes += 1
+        self.write_bytes += nbytes
+        return self._charge(nbytes, op)
+
     def read_cost(self, nbytes: int, op: Optional[OpTimer] = None) -> float:
         self.reads += 1
         self.read_bytes += nbytes
-        c = self.model.disk_cost(nbytes)
-        if op is not None:
-            op.add(c)
-            op.disk_ops += 1
-        if self.net is not None and self.owner:
-            self.net.charge_busy(self.owner, c)
-        return c
+        return self._charge(nbytes, op)
 
 
 @dataclass
@@ -193,10 +376,19 @@ class Network:
         # per-destination extra latency (straggler injection), us
         self.slow_nodes: Dict[str, float] = {}
         self._op_stack: List[OpTimer] = []
-        # per-node accumulated service time (bottleneck-server model used by
-        # the benchmarks: simulated IOPS = ops / max(stream time, node busy))
+        # per-node accumulated service time (kept for reports/expansion; the
+        # timed engine's real contention state lives in ``resources``)
         self.busy_us: Dict[str, float] = {}
         self.cpu_cost_us: float = 2.0      # per-RPC server-side CPU cost
+        # FIFO service queues, created on demand: "nic:<node>", "disk:<node>",
+        # "fuse:<client>" — the discrete-event engine's shared state
+        self.resources: Dict[str, Resource] = {}
+
+    def resource(self, name: str) -> Resource:
+        res = self.resources.get(name)
+        if res is None:
+            res = self.resources[name] = Resource(name)
+        return res
 
     def charge_busy(self, node: str, us: float) -> None:
         self.busy_us[node] = self.busy_us.get(node, 0.0) + us
@@ -204,6 +396,8 @@ class Network:
     def reset_accounting(self) -> None:
         self.busy_us.clear()
         self.stats = NetStats()
+        for res in self.resources.values():
+            res.reset()
 
     # ---- fault injection ------------------------------------------------
     def kill(self, node_id: str) -> None:
@@ -229,8 +423,11 @@ class Network:
             self.slow_nodes[node_id] = extra_us
 
     # ---- op context -----------------------------------------------------
-    def begin_op(self) -> OpTimer:
-        op = OpTimer()
+    def begin_op(self, at: Optional[float] = None) -> OpTimer:
+        """Open an op context.  ``at=None`` (the seed behaviour) gives an
+        additive, queue-blind timer; ``at=t`` gives a *timed* op whose RPCs
+        and disk IO queue on per-node resources starting at virtual time t."""
+        op = OpTimer(start_us=at or 0.0, timed=at is not None)
         self._op_stack.append(op)
         return op
 
@@ -273,18 +470,68 @@ class Network:
         **kwargs: Any,
     ) -> Any:
         """Synchronous RPC src -> dst.  Charges request+reply latency to the
-        current op (if any), applies fault rules, then invokes ``fn``."""
+        current op (if any), applies fault rules, then invokes ``fn``.
+
+        Timed ops decompose the same total cost into schedulable stages —
+        src NIC transmit → propagation → dst NIC receive+service queue →
+        handler (nested calls/disk advance the frontier) → dst NIC reply
+        transmit → propagation — so concurrent ops contend for the NICs
+        instead of overlapping for free."""
         self.check_reachable(src, dst)
+        op = self.current_op
+        if op is not None and op.timed:
+            return self._timed_call(op, src, dst, fn, args, kwargs,
+                                    nbytes, reply_bytes, kind)
         lat = self.charge(src, dst, nbytes, kind)
         service = self.cpu_cost_us + nbytes / self.model.bw_bytes_per_us
         self.charge_busy(dst, service)
         result = fn(*args, **kwargs)
         lat += self.charge(dst, src, reply_bytes, kind + ".reply")
-        op = self.current_op
         if op is not None:
             op.add(lat + service)
             op.msgs += 2
             op.bytes += nbytes + reply_bytes
+        return result
+
+    def _timed_call(self, op: OpTimer, src: str, dst: str,
+                    fn: Callable[..., Any], args: tuple, kwargs: dict,
+                    nbytes: int, reply_bytes: int, kind: str) -> Any:
+        bw = self.model.bw_bytes_per_us
+        prop = self.model.rtt_us + self.slow_nodes.get(dst, 0.0) \
+            + self.slow_nodes.get(src, 0.0)
+        self.stats.record(src, dst, nbytes, kind)
+        service = self.cpu_cost_us + nbytes / bw
+        self.charge_busy(dst, service)
+        # 1. the request occupies the source's own NIC until fully sent
+        t = self.resource(f"nic:{src}").acquire(op.now_us, nbytes / bw)
+        if op._depth == 0:
+            # outermost request: a pipelined sender may continue from here
+            op.tx_done_us = t
+        # 2. propagation, then FIFO service at the destination NIC
+        t = self.resource(f"nic:{dst}").acquire(t + prop, service)
+        op.now_us = t
+        # 3. the handler runs at the service point; its own calls and disk
+        #    IO advance the frontier further
+        op._depth += 1
+        try:
+            result = fn(*args, **kwargs)
+        except Exception:
+            # a NAK is still a reply: the error travels back over the wire
+            # before the caller can react to it
+            op._depth -= 1
+            self.stats.record(dst, src, 64, kind + ".err")
+            op.now_us = self.resource(f"nic:{dst}").acquire(
+                op.now_us, 64 / bw) + prop
+            op.msgs += 2
+            op.bytes += nbytes + 64
+            raise
+        op._depth -= 1
+        # 4. reply: dst NIC transmit + propagation back
+        self.stats.record(dst, src, reply_bytes, kind + ".reply")
+        t = self.resource(f"nic:{dst}").acquire(op.now_us, reply_bytes / bw)
+        op.now_us = t + prop
+        op.msgs += 2
+        op.bytes += nbytes + reply_bytes
         return result
 
     def parallel_calls(
@@ -299,8 +546,24 @@ class Network:
         op pays max(branch latencies).  Unreachable branches yield the
         exception instance instead of a result."""
         results: List[Any] = []
-        branch_costs: List[float] = []
         op = self.current_op
+        if op is not None and op.timed:
+            # timed fan-out: branches share the fork point; transmissions
+            # still serialize on the source NIC (one port), service queues
+            # per destination are independent
+            fork = op.fork()
+            for dst, fn, args in targets:
+                try:
+                    results.append(self.call(src, dst, fn, *args,
+                                             nbytes=nbytes,
+                                             reply_bytes=reply_bytes,
+                                             kind=kind))
+                except NetError as e:
+                    results.append(e)
+                fork.branch_done()
+            fork.join()
+            return results
+        branch_costs: List[float] = []
         for dst, fn, args in targets:
             try:
                 self.check_reachable(src, dst)

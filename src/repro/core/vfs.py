@@ -248,6 +248,8 @@ class CfsVfs:
         f.seek(offset)
         try:
             return f.read(size)
+        except (FsError, MetaError) as e:
+            raise _oserror(e, of.path)
         finally:
             f.seek(saved)                       # pread does not move the offset
 
@@ -265,6 +267,8 @@ class CfsVfs:
             f.seek(offset)
         try:
             return f.write(data)
+        except (FsError, MetaError) as e:
+            raise _oserror(e, of.path)
         finally:
             f.seek(saved)
 
@@ -273,7 +277,10 @@ class CfsVfs:
         of = self._of(fd)
         if not of.readable:
             raise CfsOSError(errno.EBADF, of.path)
-        return of.file.read(size)
+        try:
+            return of.file.read(size)
+        except (FsError, MetaError) as e:
+            raise _oserror(e, of.path)
 
     def write(self, fd: int, data: bytes) -> int:
         """Sequential write at the fd offset (EOF under O_APPEND)."""
@@ -282,7 +289,10 @@ class CfsVfs:
             raise CfsOSError(errno.EBADF, of.path)
         if of.flags & O_APPEND:
             of.file.seek(of.file.size)
-        return of.file.write(data)
+        try:
+            return of.file.write(data)
+        except (FsError, MetaError) as e:
+            raise _oserror(e, of.path)
 
     def lseek(self, fd: int, offset: int) -> int:
         of = self._of(fd)
@@ -297,7 +307,10 @@ class CfsVfs:
             raise CfsOSError(errno.EBADF, of.path)
         if size < 0:
             raise CfsOSError(errno.EINVAL, of.path)
-        of.file.truncate(size)
+        try:
+            of.file.truncate(size)
+        except (FsError, MetaError) as e:
+            raise _oserror(e, of.path)
 
     def fstat(self, fd: int) -> Dict:
         """Attributes from the handle: cached inode view with the LIVE size
@@ -310,7 +323,22 @@ class CfsVfs:
         view["extents"] = [k.as_tuple() for k in f._extents]
         return view
 
+    def flush(self, fd: int) -> None:
+        """Push buffered bytes into the pipeline WITHOUT the barrier: packets
+        may still be in flight down the replica chain afterwards.  Durability
+        plus the drain of the in-flight window is ``fsync``'s job (the
+        committed-offset rule: the ack of the highest in-flight offset
+        commits the whole prefix, so fsync waits for exactly that)."""
+        of = self._of(fd)
+        try:
+            of.file.flush()
+        except (FsError, MetaError) as e:
+            raise _oserror(e, of.path)
+
     def fsync(self, fd: int) -> None:
+        """fsync(2): flush + drain the pipelined append window + sync the
+        meta node; returns only when every byte written through this fd is
+        committed on ALL replicas of its extents."""
         of = self._of(fd)
         try:
             of.file.fsync()
