@@ -3,7 +3,14 @@
 Sequential write/read and random read/write; each process operates its own
 file (scaled: 2 MB files, 128 KB sequential IOs, 4 KB random IOs — the
 SHAPE of the workload matches fio direct-IO, sizes are scaled to simulate
-in reasonable wall time)."""
+in reasonable wall time).
+
+Besides the paper sweeps, two A/B row families isolate the event-driven
+data paths (EXPERIMENTS.md): SeqWrite25ge/SeqRead25ge (pipelined append
+window / windowed+readahead reads vs their serial seed paths) and
+RandReadStrag (p99-budget hedged replica reads vs no hedging, with
+``net.set_straggler`` slowing the PB leader that serves the most benchmark
+extents)."""
 
 from __future__ import annotations
 
@@ -43,15 +50,62 @@ def _prepare(system, mounts, clients, procs):
     return files
 
 
+def _prefill_files(mounts, files, procs):
+    """Write every benchmark file up-front, OUTSIDE any timed op (read-only
+    A/B rows must not measure their own setup), then read the head of each
+    file once so the clients' read-latency EWMAs — the hedge budget — are
+    warmed on straggler-free latencies before the measured streams start."""
+    for ci, mnt in enumerate(mounts):
+        for pi in range(procs):
+            fd = mnt.open(files[(ci, pi)], O_WRONLY | O_CREAT | O_TRUNC)
+            for _ in range(FILE_SIZE // SEQ_IO):
+                mnt.write(fd, bytes(SEQ_IO))
+            mnt.close(fd)
+    for ci, mnt in enumerate(mounts):
+        for pi in range(procs):
+            fd = mnt.open(files[(ci, pi)], O_RDONLY)
+            mnt.pread(fd, RAND_IO, 0)
+            mnt.close(fd)
+
+
+def _pick_read_straggler(mounts, files, procs) -> str:
+    """The PB leader whose partition holds the most benchmark extents — the
+    straggler that actually sits on the measured read path (a random node
+    might lead no partition any benchmark file touches)."""
+    count = {}
+    for ci, mnt in enumerate(mounts):
+        for pi in range(procs):
+            st = mnt.stat(files[(ci, pi)])
+            for (pid, *_rest) in st["extents"]:
+                count[pid] = count.get(pid, 0) + 1
+    pid = max(sorted(count), key=lambda p: count[p])
+    return mounts[0].client._dp(pid).replicas[0]
+
+
 def bench_large(system: str, cluster, clients: int, procs: int,
                 only: Optional[Set[str]] = None,
-                pipeline_depth: Optional[int] = None) -> List[BenchResult]:
+                pipeline_depth: Optional[int] = None,
+                read_window: Optional[int] = None,
+                hedge: Optional[bool] = None,
+                prefill: bool = False,
+                straggler_us: float = 0.0) -> List[BenchResult]:
     net = cluster.net
     mounts = _mounts(system, cluster, clients)
     if pipeline_depth is not None:
         for m in mounts:
             m.client.pipeline_depth = pipeline_depth
+    if read_window is not None:
+        for m in mounts:
+            m.client.read_window = read_window
+    if hedge is not None:
+        for m in mounts:
+            m.client.hedge_reads = hedge
     files = _prepare(system, mounts, clients, procs)
+    if prefill:
+        _prefill_files(mounts, files, procs)
+    if straggler_us:
+        net.set_straggler(_pick_read_straggler(mounts, files, procs),
+                          straggler_us)
     results = []
     rng = random.Random(7)
 
@@ -190,6 +244,37 @@ def run(out_rows: List[str], smoke: bool = False) -> List[dict]:
             for r in bench_large("cfs", cluster, clients, procs,
                                  only={"SeqWrite"}, pipeline_depth=depth):
                 r.name = "SeqWrite25ge"
+                r.system = label
+                results.append(r)
+    # read-path A/B #1 (EXPERIMENTS.md §Event-driven reads): the windowed +
+    # readahead read path vs the serial per-fetch seed path ("cfs-serial" =
+    # CFS_READ_WINDOW 0), hedging pinned OFF on both sides so the row
+    # isolates the window.  Files are prefilled untimed; 25 GbE profile for
+    # the same reason as the write A/B.
+    read_ab = [(1, 4)] if smoke else [(1, 4), (4, 16), (8, 16)]
+    for clients, procs in read_ab:
+        for label, window in (("cfs-serial", 0), ("cfs", 8)):
+            cluster = make_cfs_fast(4 if smoke else 10)
+            for r in bench_large("cfs", cluster, clients, procs,
+                                 only={"SeqRead"}, read_window=window,
+                                 hedge=False, prefill=True):
+                r.name = "SeqRead25ge"
+                r.system = label
+                results.append(r)
+    # read-path A/B #2: p99-hedged replica reads vs no hedging, with an
+    # injected slow replica (net.set_straggler on the PB leader serving the
+    # most benchmark extents) — the FalconFS-style tail cut.  Window pinned
+    # equal on both sides; the smoke row keeps the hedge path exercised in
+    # CI on every push.
+    strag_ab = [(1, 8)] if smoke else [(1, 8), (4, 16)]
+    for clients, procs in strag_ab:
+        for label, hedge in (("cfs-nohedge", False), ("cfs", True)):
+            cluster = make_cfs(4 if smoke else 10)
+            for r in bench_large("cfs", cluster, clients, procs,
+                                 only={"RandRead"}, read_window=8,
+                                 hedge=hedge, prefill=True,
+                                 straggler_us=5_000.0):
+                r.name = "RandReadStrag"
                 r.system = label
                 results.append(r)
     out_rows.extend(r.row() for r in results)

@@ -7,7 +7,12 @@ Prints CSV rows (test,system,clients,procs,ops,sim_iops,...,p99_us,...),
 writes results/bench/<suite>.csv, and drops a machine-readable perf
 trajectory BENCH_<suite>.json at the repo root (simulated-time fields only,
 so same-seed reruns are bit-identical — see EXPERIMENTS.md for the schema).
-``--smoke`` shrinks every sweep to a <30 s run for CI drift detection.
+``--smoke`` shrinks every sweep to a <30 s run for CI drift detection; the
+largefile smoke includes the read-path A/B rows (SeqRead with a nonzero
+CFS_READ_WINDOW, RandRead with an injected straggler replica), so the
+windowed-read and hedge paths are exercised on every push.  Smoke output
+goes to side paths (results/bench/*.smoke.csv, BENCH_*.smoke.json under
+results/bench/) and never clobbers the committed full-sweep baselines.
 The roofline suite summarizes the dry-run artifacts in results/dryrun/."""
 
 from __future__ import annotations

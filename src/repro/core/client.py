@@ -5,8 +5,12 @@ Runs "in user space with its own cache":
 * partition-routing cache — fetched from the RM at mount, refreshed by
   explicit ``sync_partitions()`` (non-persistent connections, §2.5.2);
 * inode/dentry cache — filled on create/lookup/readdir, force-synced on open;
-* leader cache — last identified PB/raft leader per data partition; reads try
-  the cached leader first, then walk the replicas (§2.4).
+* leader cache — last identified PB/raft WRITE leader per partition group,
+  learned only from accepted mutations and NotLeader hints (§2.4);
+* read affinity — the replica that last served a read per group; reads try
+  it first, then the cached leader, then walk the replicas.  A read served
+  by a follower must never redirect the next write, so the two caches are
+  disjoint.
 
 Metadata workflows follow Figure 3 exactly — inode first, dentry second, and
 on failure the inode goes to a *local orphan list* that is evicted later; all
@@ -18,10 +22,19 @@ leader of a randomly chosen writable data partition; random writes split into
 an overwrite part (raft, in-place, Fig. 5) and an append part (PB, Fig. 4);
 small files (≤128 KB at close) take the aggregated-extent path; deletes are
 asynchronous (mark, evict, punch holes / drop extents).
+
+The read path mirrors the append window on the event engine: extent fetches
+split into ≤128 KB packets issued as concurrent timed branches under a
+bounded window (``CFS_READ_WINDOW``, 0 = the serial seed path), each packet
+hedged against a p99-derived per-partition-group budget (EWMA from the
+event timeline, ``CFS_HEDGE_READS=0`` disables), and ``CfsFile.read``
+detects forward scans and keeps a window of readahead chunks prefetched —
+invalidated on seek/write/truncate, drained at the fsync/close barriers.
 """
 
 from __future__ import annotations
 
+import math
 import os
 import random
 import zlib
@@ -46,6 +59,56 @@ MAX_RETRIES = 4
 # ack.  0 disables the window (the seed's one-synchronous-round-trip-per-
 # packet path, kept for A/B benchmarking via CFS_PIPELINE_DEPTH=0).
 PIPELINE_DEPTH = int(os.environ.get("CFS_PIPELINE_DEPTH", "8"))
+
+# Read-path mirror of the append window: how many ≤128 KB extent fetches a
+# client keeps in flight at once (and how many packets of readahead a
+# sequential scan keeps prefetched).  0 disables the window: one synchronous
+# fetch per extent piece, the seed path kept for A/B benchmarking.
+READ_WINDOW = int(os.environ.get("CFS_READ_WINDOW", "8"))
+
+# Slow-replica hedging on the read path: when a fetch's modeled completion
+# blows a p99-derived budget (EWMA per data-partition group, learned from
+# the event timeline), race the next replica and charge only the winner.
+# CFS_HEDGE_READS=0 disables (fetches wait out stragglers, the seed path).
+HEDGE_READS = os.environ.get("CFS_HEDGE_READS", "1") != "0"
+
+# A hedge budget needs samples before it means anything: per-group stats
+# are trusted after this many reads, the client-wide aggregate (the cold-
+# start fallback) after twice as many.  Below both, reads never hedge.
+HEDGE_MIN_GROUP_SAMPLES = 4
+HEDGE_MIN_GLOBAL_SAMPLES = 8
+
+
+class _LatencyEwma:
+    """EWMA mean/variance of observed read latencies (one per data-partition
+    group, plus one client-wide aggregate) — the TCP-RTO trick applied to
+    hedging: budget ≈ p99 ≈ mean + 3σ, tracked incrementally so the budget
+    adapts as the event timeline accumulates.  Pure arithmetic on modeled
+    latencies: deterministic, bit-identical across same-seed reruns."""
+
+    __slots__ = ("mean", "var", "n")
+    ALPHA = 0.125                    # TCP-style smoothing gain
+
+    def __init__(self) -> None:
+        self.mean = 0.0
+        self.var = 0.0
+        self.n = 0
+
+    def observe(self, x_us: float) -> None:
+        self.n += 1
+        if self.n == 1:
+            self.mean = x_us
+            self.var = 0.0
+            return
+        d = x_us - self.mean
+        self.mean += self.ALPHA * d
+        self.var = (1.0 - self.ALPHA) * (self.var + self.ALPHA * d * d)
+
+    @property
+    def p99_us(self) -> float:
+        """Normal-approximation p99 with a 1 µs floor so a zero-variance
+        timeline (identical modeled latencies) never hedges on FP noise."""
+        return self.mean + 3.0 * math.sqrt(self.var) + 1.0
 
 
 class FsError(Exception):
@@ -107,16 +170,33 @@ class CfsClient:
         # (λFS/AsyncFS-style batched RPCs); off = the scatter path the paper's
         # Fig. 3 workflows describe step by step
         self.coalesce_meta = coalesce_meta
+        # ---- read path knobs (window + hedging) ----
+        self.read_window = READ_WINDOW
+        self.hedge_reads = HEDGE_READS
         # ---- caches (§2.4) ----
         self.meta_partitions: List[_MetaPartition] = []
         self.data_partitions: List[_DataPartition] = []
+        # leader_cache holds WRITE leaders only (PB/raft), learned from
+        # accepted mutations and NotLeader hints.  Read-serving replicas go
+        # into read_affinity — a follower that happens to serve a read must
+        # never redirect the next write (leader-cache poisoning bug).
         self.leader_cache: Dict[str, str] = {}       # group id -> node id
+        self.read_affinity: Dict[str, str] = {}      # group id -> node id
         self.dentry_cache: Dict[Tuple[int, str], Dict] = {}
         self.inode_cache: Dict[int, Dict] = {}
         self.orphan_inodes: List[int] = []           # local orphan list (§2.6)
+        # per-group + client-wide read-latency EWMAs feeding the hedge budget
+        self._read_lat: Dict[str, _LatencyEwma] = {}
+        self._read_lat_all = _LatencyEwma()
+        # per-inode write version: bumped on every write/truncate through
+        # this client so readahead caches on OTHER handles of the same file
+        # self-invalidate (cross-CLIENT writes stay relaxed, §2.7 — no
+        # leases, like kernel readahead over NFS)
+        self._ino_wver: Dict[int, int] = {}
         self.stats = {"rm_calls": 0, "meta_calls": 0, "data_calls": 0,
                       "cache_hits": 0, "retries": 0,
-                      "meta_batched_ops": 0, "meta_saved_roundtrips": 0}
+                      "meta_batched_ops": 0, "meta_saved_roundtrips": 0,
+                      "hedged_reads": 0, "ra_hits": 0}
         self.sync_partitions()
 
     # ------------------------------------------------------------------ RM
@@ -179,7 +259,7 @@ class CfsClient:
 
     def _meta_read(self, mp: _MetaPartition, op: str, *args: Any) -> Any:
         gid = f"mp{mp.pid}"
-        order = self._replica_order(gid, mp.replicas)
+        order = self._read_order(gid, mp.replicas)
         last_err: Exception = NotFound(gid)
         for nid in order:
             try:
@@ -187,7 +267,7 @@ class CfsClient:
                     self.client_id, nid, self.meta_nodes[nid].read,
                     mp.pid, op, *args, kind="client.meta")
                 self.stats["meta_calls"] += 1
-                self.leader_cache[gid] = nid
+                self.read_affinity[gid] = nid
                 return res
             except (NetError, KeyError) as e:
                 last_err = e
@@ -195,11 +275,27 @@ class CfsClient:
         raise last_err
 
     def _replica_order(self, gid: str, replicas: List[str]) -> List[str]:
-        """Cached leader first, then the rest (paper §2.4 leader cache)."""
+        """Write routing: cached WRITE leader first, then the rest (paper
+        §2.4 leader cache).  Reads never feed this cache — see
+        ``_read_order``."""
         cached = self.leader_cache.get(gid)
         if cached and cached in replicas:
             return [cached] + [r for r in replicas if r != cached]
         return list(replicas)
+
+    def _read_order(self, gid: str, replicas: List[str]) -> List[str]:
+        """Read routing: the replica that last served us (read affinity)
+        first — after a hedge that is the replica that beat the straggler —
+        then the cached write leader, then the rest."""
+        order: List[str] = []
+        aff = self.read_affinity.get(gid)
+        if aff and aff in replicas:
+            order.append(aff)
+        cached = self.leader_cache.get(gid)
+        if cached and cached in replicas and cached not in order:
+            order.append(cached)
+        order.extend(r for r in replicas if r not in order)
+        return order
 
     # --------------------------------------------------------- data routing
     def _writable_dps(self) -> List[_DataPartition]:
@@ -240,14 +336,20 @@ class CfsClient:
         raise NotFound(f"data partition {pid}")
 
     def _data_call(self, dp: _DataPartition, method: str, *args: Any,
-                   nbytes: int = 256, leader_only: bool = True) -> Any:
+                   nbytes: int = 256) -> Any:
+        """Data-partition WRITE (append/small/overwrite): cached write
+        leader first (PB leader == replicas[0] by construction when the
+        cache is cold), following NotLeader hints.  A stale or poisoned
+        cache entry costs a NAK round-trip before the hint redirects —
+        which is why read-serving replicas must never land in
+        ``leader_cache``."""
         gid = f"dp{dp.pid}"
-        order = self._replica_order(gid, dp.replicas)
-        if leader_only:
-            # PB leader is replicas[0] by construction; writes must start there
-            order = [dp.replicas[0]]
+        queue = self._replica_order(gid, dp.replicas)
         last_err: Exception = NotFound(gid)
-        for nid in order:
+        tried = 0
+        while queue and tried < 2 * max(len(dp.replicas), 1):
+            nid = queue.pop(0)
+            tried += 1
             try:
                 res = self.net.call(
                     self.client_id, nid,
@@ -256,10 +358,23 @@ class CfsClient:
                 self.stats["data_calls"] += 1
                 self.leader_cache[gid] = nid
                 return res
-            except (NetError, NotLeader) as e:
+            except NotLeader as e:
+                last_err = e
+                self.stats["retries"] += 1
+                hint = e.leader_hint
+                if hint and hint in dp.replicas and hint != nid:
+                    queue = [hint] + [n for n in queue if n != hint]
+                continue
+            except NetError as e:
                 last_err = e
                 self.stats["retries"] += 1
                 continue
+        if isinstance(last_err, NotLeader):
+            # terminal leaderless state (e.g. mid-election, or a hint outside
+            # our partition view): surface it on the callers' error channel —
+            # they catch FsError/NetError and run the report-timeout /
+            # resync / re-route recovery, not raw raft internals
+            raise FsError(f"no write leader for {gid}: {last_err}")
         raise last_err
 
     # ----------------------------------------------------- batched meta RPCs
@@ -807,25 +922,103 @@ class CfsClient:
             self.sync_partitions()
         raise FsError("small write failed on all partitions")
 
-    def read_extents(self, inode: Dict, offset: int, size: int) -> bytes:
-        """Read [offset, offset+size) of a file: map to extent keys, fetch
-        from each partition's leader (leader cache, walk replicas on miss).
+    def read_extents(self, inode: Dict, offset: int, size: int,
+                     hedge_us: Optional[float] = None) -> bytes:
+        """Read [offset, offset+size) of a file.
+
         Byte ranges no extent covers — holes from ftruncate-grow or sparse
-        writes — read back as zeros."""
+        writes — read back as zeros; pieces are assembled by file offset,
+        never by extent-map order.
+
+        Under a *timed* op with ``read_window > 0`` the fetches are the
+        mirror of the append window: extent pieces split into ≤128 KB
+        packets issued as concurrent timed branches, at most ``read_window``
+        in flight, each packet individually hedged against its partition's
+        p99 budget (``_timed_fetch``).  The op completes at the last
+        packet's arrival.  ``read_window == 0`` (or an untimed op) keeps the
+        seed's one-synchronous-fetch-per-piece path.  ``hedge_us``
+        overrides the adaptive budget (the legacy datapipe knob)."""
         size = min(size, inode["size"] - offset)
         if size <= 0:
             return b""
         out = bytearray(size)
+        pieces = self._map_pieces(inode, offset, size)
+        op = self.net.current_op
+        if op is not None and op.timed and self.read_window > 0:
+            done = self._windowed_fetch(out, pieces, op.now_us, hedge_us)
+            op.advance_to(done)
+        else:
+            for (pos, pid, eid, eoff, ln) in pieces:
+                dp = self._dp(pid)
+                chunk = self._read_one(dp, eid, eoff, ln, hedge_us=hedge_us)
+                out[pos : pos + len(chunk)] = chunk
+        return bytes(out)
+
+    def read_extents_at(self, inode: Dict, offset: int, size: int,
+                        at: float, hedge_us: Optional[float] = None
+                        ) -> Tuple[bytes, float]:
+        """Detached windowed fetch anchored at virtual time ``at`` — the
+        readahead primitive: resources are genuinely occupied (a wasted
+        prefetch is a real cost) but the caller's frontier is NOT advanced.
+        Returns ``(data, completion_time)``; the caller parks the
+        completion and advances to it on cache hit or at a barrier."""
+        size = min(size, inode["size"] - offset)
+        if size <= 0:
+            return b"", at
+        out = bytearray(size)
+        done = self._windowed_fetch(out, self._map_pieces(inode, offset, size),
+                                    at, hedge_us)
+        return bytes(out), done
+
+    @staticmethod
+    def _map_pieces(inode: Dict, offset: int, size: int
+                    ) -> List[Tuple[int, int, int, int, int]]:
+        """Map a byte range onto extent pieces:
+        [(out_pos, partition_id, extent_id, extent_offset, length)]."""
         need_lo, need_hi = offset, offset + size
+        pieces: List[Tuple[int, int, int, int, int]] = []
         for (pid, eid, foff, eoff, esize) in inode["extents"]:
             seg_lo, seg_hi = foff, foff + esize
             lo, hi = max(need_lo, seg_lo), min(need_hi, seg_hi)
             if lo >= hi:
                 continue
+            pieces.append((lo - need_lo, pid, eid, eoff + (lo - seg_lo),
+                           hi - lo))
+        return pieces
+
+    def _windowed_fetch(self, out: bytearray,
+                        pieces: List[Tuple[int, int, int, int, int]],
+                        at: float, hedge_us: Optional[float] = None) -> float:
+        """Issue the pieces as ≤128 KB packet fetches with a bounded
+        in-flight window starting at ``at``; fill ``out``; return the last
+        completion time.  The send frontier advances to each request's NIC
+        departure (``tx_done``), so requests stream out back-to-back while
+        earlier replies are still in flight — when the window is full, the
+        next send waits for the EARLIEST outstanding completion (replies
+        from different partitions arrive out of order, unlike the append
+        chain's FIFO acks)."""
+        window: List[float] = []
+        depth = max(1, self.read_window)    # read_extents_at may be called
+        send_frontier = at                  # with window 0: degrade to serial
+        last_done = at
+        for (pos, pid, eid, eoff, ln) in pieces:
             dp = self._dp(pid)
-            chunk = self._read_one(dp, eid, eoff + (lo - seg_lo), hi - lo)
-            out[lo - need_lo : lo - need_lo + len(chunk)] = chunk
-        return bytes(out)
+            off = 0
+            while off < ln:
+                n = min(PACKET_SIZE, ln - off)
+                send_at = send_frontier
+                if len(window) >= depth:
+                    first = min(window)
+                    window.remove(first)
+                    send_at = max(send_at, first)
+                data, done, tx_done = self._timed_fetch(
+                    dp, eid, eoff + off, n, send_at, hedge_us)
+                out[pos + off : pos + off + len(data)] = data
+                window.append(done)
+                last_done = max(last_done, done)
+                send_frontier = max(send_frontier, tx_done)
+                off += n
+        return last_done
 
     def _punch_range(self, pid: int, eid: int, eoff: int, length: int) -> None:
         """Free [eoff, eoff+length) of one extent on every replica — the
@@ -843,24 +1036,151 @@ class CfsClient:
             except NetError:
                 continue
 
+    def _serve_read_call(self, dp: _DataPartition, nid: str, eid: int,
+                         eoff: int, size: int) -> bytes:
+        return self.net.call(
+            self.client_id, nid, self.data_nodes[nid].serve_read,
+            dp.pid, eid, eoff, size,
+            nbytes=128, reply_bytes=size + 64, kind="client.data")
+
     def _read_one(self, dp: _DataPartition, eid: int, eoff: int,
-                  size: int) -> bytes:
+                  size: int, hedge_us: Optional[float] = None) -> bytes:
+        """One synchronous extent fetch (the serial read path).  Successful
+        replicas are cached into ``read_affinity`` — never ``leader_cache``
+        (a follower serving a read must not misroute the next write).
+
+        With ``hedge_us`` set, a first attempt whose modeled cost blows the
+        budget races the next replica and only the winner's cost is charged
+        (the promoted ``storage/datapipe.hedged_read_file`` logic)."""
+        op = self.net.current_op
+        if op is not None and op.timed:
+            data, done, _tx = self._timed_fetch(dp, eid, eoff, size,
+                                                op.now_us, hedge_us)
+            op.advance_to(done)
+            return data
         gid = f"dp{dp.pid}"
-        order = self._replica_order(gid, dp.replicas)
+        order = self._read_order(gid, dp.replicas)
+        attempts: List[Tuple[float, int, str, bytes]] = []
         last_err: Exception = NotFound(gid)
-        for nid in order:
+        for idx, nid in enumerate(order):
+            self.net.begin_op()         # untimed sub-op measures the cost
             try:
-                res = self.net.call(
-                    self.client_id, nid, self.data_nodes[nid].serve_read,
-                    dp.pid, eid, eoff, size,
-                    nbytes=128, reply_bytes=size + 64, kind="client.data")
-                self.stats["data_calls"] += 1
-                self.leader_cache[gid] = nid
-                return res
+                d = self._serve_read_call(dp, nid, eid, eoff, size)
             except (NetError, ExtentError) as e:
                 last_err = e
+                self.net.end_op()
                 continue
-        raise last_err
+            cost = self.net.end_op().us
+            self.stats["data_calls"] += 1
+            attempts.append((cost, idx, nid, d))
+            if hedge_us is None or cost <= hedge_us or len(attempts) > 1:
+                break
+            if idx + 1 >= len(order):
+                break               # no replica left to race against
+            # budget blown: race the next replica; min() charges the winner
+            self.stats["hedged_reads"] += 1
+        if not attempts:
+            raise last_err
+        cost, _, nid, data = min(attempts, key=lambda a: (a[0], a[1]))
+        self.read_affinity[gid] = nid
+        self._observe_read(gid, cost)
+        if op is not None:
+            op.add(cost)
+        return data
+
+    def _timed_fetch(self, dp: _DataPartition, eid: int, eoff: int,
+                     size: int, at: float, hedge_us: Optional[float] = None
+                     ) -> Tuple[bytes, float, float]:
+        """One packet fetch on the event timeline, hedged against the
+        partition group's p99 budget.
+
+        The fetch runs as a timed sub-op starting at ``at``; primary and
+        hedge are concurrent branches of an ``OpTimer.fork``: if the
+        primary's completion exceeds ``at + budget``, the next replica is
+        raced from the moment the budget expires, and ``fork.join_first()``
+        resumes at the winner — the loser's queueing/service stays on the
+        simulated resources (hedging is not free for the cluster, only for
+        the caller).  Returns ``(data, completion_us, request_tx_done_us)``.
+        The winner lands in ``read_affinity`` so later reads of this group
+        go straight to the replica that actually answered fastest, and the
+        winner's latency feeds the budget EWMAs."""
+        gid = f"dp{dp.pid}"
+        order = self._read_order(gid, dp.replicas)
+        budget = hedge_us
+        if budget is None and self.hedge_reads:
+            budget = self._hedge_budget(gid)
+        attempts: List[Tuple[float, int, str, bytes]] = []
+        last_err: Exception = NotFound(gid)
+        pkt = self.net.begin_op(at=at)
+        try:
+            fork = pkt.fork()
+            t_fail = at
+            try:
+                d = self._serve_read_call(dp, order[0], eid, eoff, size)
+                attempts.append((pkt.now_us, 0, order[0], d))
+                self.stats["data_calls"] += 1
+                fork.branch_done()
+            except (NetError, ExtentError) as e:
+                last_err = e
+                t_fail = pkt.now_us          # the NAK's arrival time
+                fork.branch_done(record=False)
+            tx_done = pkt.tx_done_us
+            primary_lat = attempts[0][0] - at if attempts else None
+            if len(order) > 1 and (
+                    not attempts or
+                    (budget is not None and primary_lat > budget)):
+                # hedge branch: fires when the budget timer expires (or the
+                # moment the primary's NAK lands).  Counted when ISSUED on a
+                # blown budget — a hedge that then NAKs still raced.
+                if primary_lat is not None:
+                    self.stats["hedged_reads"] += 1
+                pkt.advance_to(t_fail if not attempts else at + budget)
+                try:
+                    d = self._serve_read_call(dp, order[1], eid, eoff, size)
+                    attempts.append((pkt.now_us, 1, order[1], d))
+                    self.stats["data_calls"] += 1
+                    fork.branch_done()
+                except (NetError, ExtentError) as e:
+                    last_err = e
+                    t_fail = max(t_fail, pkt.now_us)
+                    fork.branch_done(record=False)
+            fork.join_first()
+            if not attempts:
+                # both racers failed: walk the remaining replicas serially
+                # from the time the client learned of the later failure
+                pkt.advance_to(t_fail)
+                for idx, nid in enumerate(order[2:], start=2):
+                    try:
+                        d = self._serve_read_call(dp, nid, eid, eoff, size)
+                        attempts.append((pkt.now_us, idx, nid, d))
+                        self.stats["data_calls"] += 1
+                        break
+                    except (NetError, ExtentError) as e:
+                        last_err = e
+        finally:
+            self.net.end_op()
+        if not attempts:
+            raise last_err
+        done, _, nid, data = min(attempts, key=lambda a: (a[0], a[1]))
+        self.read_affinity[gid] = nid
+        self._observe_read(gid, done - at)
+        return data, done, tx_done
+
+    # ------------------------------------------------- hedge budget (p99 EWMA)
+    def _hedge_budget(self, gid: str) -> Optional[float]:
+        """p99-derived hedge budget for one data-partition group, from the
+        latency EWMAs the event timeline feeds; the client-wide aggregate
+        covers the cold start, and below both minimums reads never hedge."""
+        s = self._read_lat.get(gid)
+        if s is not None and s.n >= HEDGE_MIN_GROUP_SAMPLES:
+            return s.p99_us
+        if self._read_lat_all.n >= HEDGE_MIN_GLOBAL_SAMPLES:
+            return self._read_lat_all.p99_us
+        return None
+
+    def _observe_read(self, gid: str, lat_us: float) -> None:
+        self._read_lat.setdefault(gid, _LatencyEwma()).observe(lat_us)
+        self._read_lat_all.observe(lat_us)
 
 
 def _uncovered(lo: int, hi: int,
@@ -896,11 +1216,20 @@ class CfsFile:
         # chain-ack times of pipelined in-flight packets (virtual us); an
         # fsync/read barrier drains this via CfsClient.drain_window
         self._inflight: List[float] = []
+        # ---- sequential readahead (mirror of the append window) ----
+        # prefetched chunks [(file_offset, data, ready_us)]; a cache hit
+        # advances the op to ready_us, fsync/close barrier-drain the rest
+        self._ra_chunks: List[Tuple[int, bytes, float]] = []
+        self._ra_next = -1          # where a forward scan would read next
+        self._ra_pos = 0            # highest offset prefetched so far
+        self._ra_wver = -1          # inode write version the cache is for
 
     # ---- write ---------------------------------------------------------------
     def write(self, data: bytes) -> int:
         if "r" == self.mode:
             raise FsError("read-only handle")
+        self._wver_bump()           # prefetched bytes (any handle) now stale
+        self._ra_reset()
         eof = self._buf_start + len(self._buf)
         if self.pos == eof:
             self._write_append(data)
@@ -987,15 +1316,99 @@ class CfsFile:
         self.flush()
         # read-your-writes: a read behind the window waits for the acks
         self.client.drain_window(self._inflight)
-        inode = {"size": self._size,
-                 "extents": [k.as_tuple() for k in self._extents]}
         if size < 0:
             size = self._size - self.pos
-        data = self.client.read_extents(inode, self.pos, size)
+        start = self.pos
+        op = self.client.net.current_op
+        ra_on = (op is not None and op.timed and
+                 self.client.read_window > 0 and size > 0)
+        data = self._ra_serve(start, size) if ra_on else None
+        if data is None:
+            data = self.client.read_extents(self._inode_view(), start, size)
         self.pos += len(data)
+        seq = start == self._ra_next
+        self._ra_next = start + len(data)
+        if ra_on and seq and len(data) > 0:
+            # a confirmed forward scan keeps up to read_window IO-sized
+            # chunks prefetched ahead of the reader
+            self._ra_topup(self._ra_next, len(data))
         return data
 
+    def _inode_view(self) -> Dict:
+        return {"size": self._size,
+                "extents": [k.as_tuple() for k in self._extents]}
+
+    def _wver_bump(self) -> None:
+        """Advance the client-wide write version of this inode: every
+        handle's readahead cache for the file self-invalidates, not just
+        this one's (cross-handle read-your-writes within one client)."""
+        ino = self.inode["inode"]
+        self.client._ino_wver[ino] = self.client._ino_wver.get(ino, 0) + 1
+
+    def _ra_serve(self, start: int, size: int) -> Optional[bytes]:
+        """Serve [start, start+size) from the readahead cache if a chunk
+        covers it; the op waits until the prefetched bytes have actually
+        arrived (``ready_us``).  Partial head coverage falls back to the
+        network path (and drops the stale chunks), as does a cache built
+        before another handle's write to the same inode (version check)."""
+        if self._ra_wver != self.client._ino_wver.get(self.inode["inode"], 0):
+            self._ra_chunks.clear()
+            self._ra_pos = 0        # re-prefetch the invalidated range
+            return None
+        want = min(size, self._size - start)
+        for i, (c_start, c_data, ready) in enumerate(self._ra_chunks):
+            if c_start != start:
+                continue
+            if len(c_data) < want:
+                break               # scan pattern changed: refetch fresh
+            self._ra_chunks.pop(i)
+            if len(c_data) > want:
+                # keep the tail for the next sequential read
+                self._ra_chunks.insert(i, (start + want, c_data[want:], ready))
+            op = self.client.net.current_op
+            if op is not None:
+                op.advance_to(ready)
+            self.client.stats["ra_hits"] += 1
+            return c_data[:want]
+        if self._ra_chunks:
+            self._ra_chunks.clear()     # scan diverged: cached run is dead
+            self._ra_pos = 0
+        return None
+
+    def _ra_topup(self, frontier: int, io_size: int) -> None:
+        """Keep the prefetch pipeline ``read_window`` chunks deep: issue
+        detached windowed fetches (resources occupied, frontier NOT
+        advanced) for the next IO-sized chunks beyond ``frontier``."""
+        op = self.client.net.current_op
+        self._ra_wver = self.client._ino_wver.get(self.inode["inode"], 0)
+        nxt = max(self._ra_pos, frontier)
+        limit = min(self._size, frontier + self.client.read_window * io_size)
+        inode = self._inode_view()
+        while nxt < limit:
+            ln = min(io_size, self._size - nxt)
+            data, ready = self.client.read_extents_at(inode, nxt, ln,
+                                                      op.now_us)
+            self._ra_chunks.append((nxt, data, ready))
+            nxt += ln
+        self._ra_pos = nxt
+
+    def _ra_reset(self) -> None:
+        """Invalidate the readahead state (seek / write / truncate): cached
+        chunks are dropped without waiting — the prefetch cost stays spent,
+        nobody consumes the arrival."""
+        self._ra_chunks.clear()
+        self._ra_next = -1
+        self._ra_pos = 0
+
+    def _ra_barrier(self) -> None:
+        """fsync/close barrier: wait out every prefetched chunk still in
+        flight, mirroring the append window's drain."""
+        pending = [ready for (_s, _d, ready) in self._ra_chunks]
+        self.client.drain_window(pending)
+
     def seek(self, pos: int) -> None:
+        if pos != self.pos:
+            self._ra_reset()
         self.pos = pos
 
     def truncate(self, size: int = 0) -> None:
@@ -1004,6 +1417,8 @@ class CfsFile:
         hole that reads back as zeros.  Buffered appends are flushed FIRST so
         the trim operates on the real extent map — the in-flight buffer used
         to be dropped silently, which corrupted truncate-to-nonzero."""
+        self._wver_bump()           # cached runs may cover punched bytes
+        self._ra_reset()
         self.client.drain_window(self._inflight)   # never punch under the window
         if size == 0:
             # everything goes — no point making the buffer durable first
@@ -1069,6 +1484,7 @@ class CfsFile:
         prefix, §2.2.2), THEN synchronize the meta node (§2.7.1)."""
         self.flush()
         self.client.drain_window(self._inflight)
+        self._ra_barrier()          # outstanding readahead is in-flight too
         if self._dirty:
             self.inode = self.client.update_extents(
                 self.inode["inode"], self._size, self._extents)

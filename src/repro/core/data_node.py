@@ -110,7 +110,13 @@ class DataPartitionReplica:
                       create: bool = False) -> WriteResult:
         """Entry point on the PB leader.  Writes locally, chains to backups,
         returns the committed offset (paper: 'the leader always returns the
-        largest offset that has been committed by all the replicas')."""
+        largest offset that has been committed by all the replicas').  A
+        replica that is NOT the PB leader NAKs with a hint instead of
+        accepting the write — a client whose leader cache went stale (or was
+        poisoned by a read-serving follower) must be redirected, never
+        silently fork the chain."""
+        if not self.is_pb_leader:
+            raise NotLeader(self.replicas[0] if self.replicas else None)
         if self.status != PartitionStatus.READ_WRITE:
             raise ExtentError(f"partition {self.partition_id} is {self.status}")
         if create and not self.store.has(extent_id):
@@ -178,6 +184,8 @@ class DataPartitionReplica:
         tiny extent + physical offset, then chains the same placement to the
         backups (the ordered chain keeps every replica's tiny extent aligned).
         Returns (extent_id, physical_offset, committed_bytes)."""
+        if not self.is_pb_leader:
+            raise NotLeader(self.replicas[0] if self.replicas else None)
         if self.status != PartitionStatus.READ_WRITE:
             raise ExtentError(f"partition {self.partition_id} is {self.status}")
         eid, off = self.store.write_small(data, self.node.op())

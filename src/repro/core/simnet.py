@@ -267,7 +267,8 @@ class OpTimer:
 
 class _OpFork:
     """Helper for concurrent branches of one op (local disk write happening
-    while the packet is forwarded down the chain, fan-out RPCs, ...)."""
+    while the packet is forwarded down the chain, fan-out RPCs, hedged
+    request races, ...)."""
 
     __slots__ = ("op", "t0", "ends")
 
@@ -276,15 +277,27 @@ class _OpFork:
         self.t0 = op.now_us
         self.ends: List[float] = []
 
-    def branch_done(self) -> None:
-        """Record the current branch's end; rewind to the fork point."""
-        self.ends.append(self.op.now_us)
+    def branch_done(self, record: bool = True) -> None:
+        """Record the current branch's end; rewind to the fork point.
+        ``record=False`` rewinds without recording — a branch that failed
+        (e.g. a hedge attempt that NAKed) must not win a race join, though
+        the resources it consumed stay consumed."""
+        if record:
+            self.ends.append(self.op.now_us)
         self.op.now_us = self.t0
 
     def join(self) -> None:
         """Resume the op at the latest branch end (the running timeline is
-        the final implicit branch)."""
+        the final implicit branch) — an all-branches barrier (fan-out)."""
         self.op.now_us = max([self.op.now_us] + self.ends)
+
+    def join_first(self) -> None:
+        """Resume the op at the EARLIEST recorded branch end — a race: the
+        winner defines the op's completion (hedged reads charge only the
+        winner), while every branch's resource occupancy stays real.  A
+        race with no recorded ends leaves the op at the fork point."""
+        if self.ends:
+            self.op.now_us = min(self.ends)
 
 
 class Disk:

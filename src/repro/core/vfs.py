@@ -238,6 +238,12 @@ class CfsVfs:
 
     # --------------------------------------------------------------- fd I/O
     def pread(self, fd: int, size: int, offset: int) -> bytes:
+        """pread(2).  Read-your-writes holds under a nonzero pipeline
+        window for EVERY open mode, O_APPEND included: the handle's read
+        path flushes buffered bytes and drains the in-flight append window
+        (the committed-offset barrier) before fetching, and the fd offset
+        is saved/restored around the positioned read (pinned by
+        ``test_vfs_o_append_pread_drains_pipeline_window``)."""
         of = self._of(fd)
         if not of.readable:
             raise CfsOSError(errno.EBADF, of.path)
@@ -273,7 +279,11 @@ class CfsVfs:
             f.seek(saved)
 
     def read(self, fd: int, size: int = -1) -> bytes:
-        """Sequential read advancing the fd offset."""
+        """Sequential read advancing the fd offset.  Forward scans are
+        detected by the handle and readahead-pipelined (a window of
+        prefetched chunks, invalidated on seek/write/truncate, drained at
+        the fsync/close barriers); the same drain-before-read barrier as
+        ``pread`` guarantees read-your-writes behind the append window."""
         of = self._of(fd)
         if not of.readable:
             raise CfsOSError(errno.EBADF, of.path)

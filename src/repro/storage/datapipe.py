@@ -6,9 +6,10 @@
   deterministic (epoch, step) addressing so a restarted trainer replays the
   exact batch sequence (checkpoint/restart test relies on this).
 * **Hedged reads** (straggler mitigation): a read whose modeled latency on
-  the cached leader exceeds ``hedge_us`` is retried on the next replica and
-  the faster path wins — the paper's leader-cache retry (§2.4) promoted into
-  a tail-latency tool.
+  the preferred replica exceeds ``hedge_us`` is raced against the next
+  replica and the faster path wins — now served by the client's own hedged
+  read path (``CfsClient.read_extents``), which also maintains an adaptive
+  p99 budget when no explicit ``hedge_us`` is given.
 """
 
 from __future__ import annotations
@@ -62,46 +63,22 @@ class ShardWriter:
 
 def hedged_read_file(mount: CfsMount, path: str,
                      hedge_us: float = 2_000.0) -> bytes:
-    """Read with straggler hedging: measure the modeled latency of the
-    leader attempt; if it blows the budget, race the next replica and charge
-    only the winner's latency to the caller's op."""
+    """Read a whole file with straggler hedging, delegating to the client's
+    hedged ``read_extents``: an attempt whose modeled latency blows the
+    budget races the next replica and only the winner is charged; the
+    winner lands in the client's read-affinity map (never the write-leader
+    cache).
+
+    Delegation also fixes the sparse-file corruption of the old in-module
+    reassembly, which concatenated extents in map order — ignoring
+    ``file_offset`` and the zero-filled holes ftruncate-grow leaves — and
+    returned shifted/short data for any non-contiguous extent map."""
     client = mount.client
-    net = client.net
     parent, leaf, dentry = mount._resolve(path)
     if dentry is None:
         raise NotFound(path)
     inode = client.get_inode(dentry["inode"])
-    out = bytearray()
-    for (pid, eid, foff, eoff, esize) in inode["extents"]:
-        dp = client._dp(pid)
-        gid = f"dp{dp.pid}"
-        order = client._replica_order(gid, dp.replicas)
-        attempts = []
-        data = None
-        for nid in order[:2]:
-            sub = net.begin_op()
-            try:
-                data_try = net.call(client.client_id, nid,
-                                    client.data_nodes[nid].serve_read,
-                                    dp.pid, eid, eoff, esize,
-                                    nbytes=128, reply_bytes=esize + 64,
-                                    kind="client.data.hedged")
-            except Exception:
-                net.end_op()
-                continue
-            cost = net.end_op().us
-            attempts.append((cost, nid, data_try))
-            if cost <= hedge_us:
-                break       # leader was fast enough — no hedge needed
-        if not attempts:
-            raise NotFound(f"unreadable extent {eid} of {path}")
-        cost, nid, data = min(attempts)
-        client.leader_cache[gid] = nid
-        op = net.current_op
-        if op is not None:
-            op.add(cost)    # the racer's cost is hidden by the winner
-        out.extend(data)
-    return bytes(out)
+    return client.read_extents(inode, 0, inode["size"], hedge_us=hedge_us)
 
 
 class ShardReader:

@@ -135,9 +135,10 @@ def test_client_leader_cache_reduces_retries(cluster):
     mnt.write_file("/lc.bin", b"d" * 4096)
     st = mnt.stat("/lc.bin")
     pid = st["extents"][0][0]
-    # first read populates the cache; later reads go straight to the leader
+    # first read populates the read-affinity cache; later reads go straight
+    # to the replica that served (the write-leader cache is reads-untouched)
     mnt.read_file("/lc.bin")
-    assert f"dp{pid}" in mnt.client.leader_cache
+    assert f"dp{pid}" in mnt.client.read_affinity
     calls0 = mnt.client.stats["data_calls"]
     mnt.read_file("/lc.bin")
     assert mnt.client.stats["data_calls"] == calls0 + 1  # exactly one RPC

@@ -125,8 +125,10 @@ def test_hedged_read_avoids_straggler(cluster, data_volume):
     cluster.net.set_straggler(leader, 0.0)
     assert data == b"z" * 4096
     assert cost < 50_000.0, f"hedge failed to dodge the straggler: {cost}us"
-    # and the fast replica is now the cached leader
-    assert mnt.client.leader_cache[f"dp{pid}"] != leader
+    # the fast replica wins the READ affinity; the write-leader cache must
+    # keep pointing at the true leader (poisoning it misroutes writes)
+    assert mnt.client.read_affinity[f"dp{pid}"] != leader
+    assert mnt.client.leader_cache[f"dp{pid}"] == leader
 
 
 def test_datapipe_deterministic_batches(cluster, data_volume):
