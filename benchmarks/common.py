@@ -51,6 +51,9 @@ class BenchResult:
     p95_us: float
     p99_us: float
     bottleneck: str          # "stream" (latency-bound) | resource name
+    # suite-specific extras (hit rates, staleness, RPC counts…): merged into
+    # the JSON trajectory; the CSV row keeps its fixed columns
+    extra: Dict[str, float] = field(default_factory=dict)
 
     def row(self) -> str:
         return (f"{self.name},{self.system},{self.clients},{self.procs},"
@@ -61,7 +64,7 @@ class BenchResult:
     def json_obj(self) -> Dict:
         """Machine-readable form for BENCH_<suite>.json — simulated-time
         fields only (wall clock would break bit-identical reruns)."""
-        return {
+        obj = {
             "test": self.name, "system": self.system,
             "clients": self.clients, "procs": self.procs, "ops": self.ops,
             "sim_iops": round(self.sim_iops, 3),
@@ -71,6 +74,9 @@ class BenchResult:
             "p99_us": round(self.p99_us, 3),
             "bottleneck": self.bottleneck,
         }
+        for k, v in self.extra.items():
+            obj[k] = round(v, 4) if isinstance(v, float) else v
+        return obj
 
 
 HEADER = ("test,system,clients,procs,ops,sim_iops,wall_us_per_op,"

@@ -2,12 +2,26 @@
 
 Seven operations (Table 2), run on CFS and the Ceph-like baseline across a
 single-client process sweep (Fig. 6) and a multi-client sweep at 64
-procs/client (Fig. 7 / Table 3)."""
+procs/client (Fig. 7 / Table 3).
+
+Two A/B sub-suites ride along:
+
+* **StatOpen** — the stat/open-heavy phase under the metadata-session
+  lease contract (system ``cfs``) vs the seed's sync-on-open path
+  (``cfs-sync``, session TTL forced to 0): same cluster, same streams.
+  The JSON rows carry `meta_rpcs`, `hit_rate`, `neg_hits`,
+  `revalidations` and `stale_max_us` extras; the lease row also reports
+  `meta_rpc_reduction` vs the sync row.
+* **MkdirR3/MkdirR5** — metadata mutations with the raft append legs
+  fanned out concurrently (``cfs``) vs serialized per peer
+  (``cfs-nofan``), at 3 and 5 meta replicas.
+"""
 
 from __future__ import annotations
 
 from typing import Callable, List
 
+import repro.core.raft as raft_core
 from repro.core import (CfsCluster, CfsVfs, O_CREAT, O_RDONLY, O_TRUNC,
                         O_WRONLY)
 from repro.baseline.cephlike import CephLikeCluster, CephLikeMount
@@ -180,6 +194,107 @@ def bench_mdtest(system: str, cluster, clients: int, procs: int
     return results
 
 
+# ---- A/B 1: metadata sessions (lease/version cache) vs sync-on-open -------
+AB_FILES = 16            # shared hot set the procs stat/open
+AB_MISSING = 4           # missing names probed per stream (negative dentries)
+
+
+def _open_close(mnt: CfsVfs, path: str) -> None:
+    """mdtest FileStat/open phase op: open(O_RDONLY) + close — pure
+    metadata under the session contract (no force-sync on open)."""
+    mnt.close(mnt.open(path, O_RDONLY))
+
+
+def bench_meta_sessions(clients: int, procs: int, smoke: bool
+                        ) -> List[BenchResult]:
+    """Cached-vs-sync A/B on a stat/open-heavy workload (ISSUE-4): each
+    proc stats and opens files from a shared pool and probes a missing
+    name.  ``cfs`` runs the lease/version session (default TTLs),
+    ``cfs-sync`` forces session TTL 0 — the seed's sync-on-open path —
+    on an identical cluster and stream layout."""
+    rows: List[BenchResult] = []
+    pool = "/pool"
+
+    def so(mnt, ci, pi):
+        def ops():
+            for i in range(ITEMS):
+                yield (lambda i=i, mnt=mnt, pi=pi:
+                       mnt.stat(f"{pool}/f{(pi + i) % AB_FILES}"))
+                yield (lambda i=i, mnt=mnt, pi=pi:
+                       _open_close(mnt, f"{pool}/f{(pi + 7 * i) % AB_FILES}"))
+                yield (lambda i=i, mnt=mnt:
+                       mnt.exists(f"{pool}/missing{i % AB_MISSING}"))
+        return ops()
+
+    SESSION_KEYS = ("meta_calls", "meta_cache_hits", "meta_cache_misses",
+                    "neg_hits", "lease_revalidations")
+    meta_rpcs = {}
+    for label, sync in (("cfs", False), ("cfs-sync", True)):
+        cluster = make_cfs(4 if smoke else 10)
+        mounts = _mounts("cfs", cluster, clients)
+        if sync:
+            for m in mounts:
+                m.client.session.ttl_us = 0.0     # seed sync-on-open path
+        mounts[0].mkdir(pool)
+        for i in range(AB_FILES):
+            creat_file(mounts[0], f"{pool}/f{i}")
+        before = {k: sum(m.client.stats[k] for m in mounts)
+                  for k in SESSION_KEYS}
+        r = run_streams("StatOpen", label, cluster.net,
+                        _streams_for(mounts, procs, so), clients, procs)
+        st = {k: sum(m.client.stats[k] for m in mounts) - before[k]
+              for k in SESSION_KEYS}
+        hits = st["meta_cache_hits"] + st["neg_hits"]
+        lookups = hits + st["meta_cache_misses"]
+        r.extra = {
+            "meta_rpcs": st["meta_calls"],
+            "hit_rate": hits / lookups if lookups else 0.0,
+            "neg_hits": st["neg_hits"],
+            "revalidations": st["lease_revalidations"],
+            "stale_max_us": max(m.client.stats["meta_stale_max_us"]
+                                for m in mounts),
+            "ttl_us": mounts[0].client.session.ttl_us,
+        }
+        meta_rpcs[label] = st["meta_calls"]
+        rows.append(r)
+    rows[0].extra["meta_rpc_reduction"] = (
+        1.0 - meta_rpcs["cfs"] / max(meta_rpcs["cfs-sync"], 1))
+    return rows
+
+
+# ---- A/B 2: raft fan-out (parallel AppendEntries legs) ---------------------
+def bench_raft_fanout(smoke: bool) -> List[BenchResult]:
+    """Meta-mutation p50 with the leader→follower append legs forked as
+    concurrent branches (``cfs``) vs serialized inside the propose
+    (``cfs-nofan``), at 3 and 5 meta replicas."""
+    rows: List[BenchResult] = []
+    clients, procs = (1, 2) if smoke else (2, 16)
+    for reps in (3, 5):
+        for label, fan in (("cfs", True), ("cfs-nofan", False)):
+            prev = raft_core.FANOUT_APPENDS
+            raft_core.FANOUT_APPENDS = fan
+            try:
+                c = CfsCluster(n_meta=6, n_data=6,
+                               meta_mem_capacity=512 * 1024 * 1024,
+                               extent_max_size=8 * 1024 * 1024, seed=42)
+                c.create_volume("bench", n_meta_partitions=4,
+                                n_data_partitions=8, replicas=reps)
+                mounts = _mounts("cfs", c, clients)
+                base = f"/fan{reps}"
+                mounts[0].mkdir(base)
+
+                def mk(mnt, ci, pi):
+                    return (lambda i=i, ci=ci, pi=pi, mnt=mnt:
+                            mnt.mkdir(f"{base}/d{ci}_{pi}_{i}")
+                            for i in range(ITEMS))
+                rows.append(run_streams(f"MkdirR{reps}", label, c.net,
+                                        _streams_for(mounts, procs, mk),
+                                        clients, procs))
+            finally:
+                raft_core.FANOUT_APPENDS = prev
+    return rows
+
+
 def run(out_rows: List[str], smoke: bool = False) -> List[dict]:
     # Fig. 6: single client, procs sweep; Fig. 7/Table 3: clients x 64 procs
     single = [2] if smoke else [1, 4, 16, 64]
@@ -192,5 +307,9 @@ def run(out_rows: List[str], smoke: bool = False) -> List[dict]:
         for clients, procs in multi:
             cluster = factory(4 if smoke else 10)
             results.extend(bench_mdtest(system, cluster, clients, procs))
+    # session cached-vs-sync A/B at the Table-3 scale (smoke: tiny sweep)
+    ab_clients, ab_procs = (2, 4) if smoke else (8, 64)
+    results.extend(bench_meta_sessions(ab_clients, ab_procs, smoke))
+    results.extend(bench_raft_fanout(smoke))
     out_rows.extend(r.row() for r in results)
     return [r.json_obj() for r in results]

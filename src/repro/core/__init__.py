@@ -9,6 +9,7 @@ Public surface:
 
 from .client import CfsClient, CfsFile, FsError, NotFound, Exists
 from .fs import CfsCluster, CfsMount
+from .meta_session import MetaSession
 from .simnet import (EventScheduler, LatencyModel, Network, Resource,
                      SimClock)
 from .types import PACKET_SIZE, SMALL_FILE_THRESHOLD
@@ -17,7 +18,7 @@ from .vfs import (CfsOSError, CfsVfs, O_ACCMODE, O_APPEND, O_CREAT, O_EXCL,
 
 __all__ = [
     "CfsCluster", "CfsMount", "CfsClient", "CfsFile", "CfsVfs", "CfsOSError",
-    "FsError", "NotFound", "Exists",
+    "MetaSession", "FsError", "NotFound", "Exists",
     "O_RDONLY", "O_WRONLY", "O_RDWR", "O_ACCMODE",
     "O_CREAT", "O_EXCL", "O_TRUNC", "O_APPEND",
     "EventScheduler", "LatencyModel", "Network", "Resource", "SimClock",

@@ -3,8 +3,13 @@
 Runs "in user space with its own cache":
 
 * partition-routing cache — fetched from the RM at mount, refreshed by
-  explicit ``sync_partitions()`` (non-persistent connections, §2.5.2);
-* inode/dentry cache — filled on create/lookup/readdir, force-synced on open;
+  explicit ``sync_partitions()`` (non-persistent connections, §2.5.2) and
+  rate-limited per virtual-time window on the routing-miss path so a burst
+  of misses costs one RM round-trip;
+* inode/dentry cache — filled on create/lookup/readdir, governed by the
+  :class:`~repro.core.meta_session.MetaSession` lease/version contract:
+  TTL leases with mvcc revalidation and negative dentries replace the
+  paper's force-sync-on-open (``CFS_META_TTL=0`` restores the seed path);
 * leader cache — last identified PB/raft WRITE leader per partition group,
   learned only from accepted mutations and NotLeader hints (§2.4);
 * read affinity — the replica that last served a read per group; reads try
@@ -53,6 +58,11 @@ __all__ = ["CfsClient", "CfsFile", "FsError", "NotFound", "Exists",
            "NotADirectory", "IsADirectory", "DirNotEmpty"]
 
 MAX_RETRIES = 4
+
+# Routing-miss resyncs of the partition table are rate-limited to one RM
+# round-trip per this virtual-time window (µs); 0 disables the limiter
+# (every miss syncs — the seed path).  Recovery paths always force a sync.
+SYNC_WINDOW_US = float(os.environ.get("CFS_SYNC_WINDOW_US", "1000"))
 
 # Sequential-write pipelining (§2.7): how many ≤128 KB packets a client
 # keeps in flight down the replica chain before it must wait for the oldest
@@ -196,18 +206,56 @@ class CfsClient:
         self.stats = {"rm_calls": 0, "meta_calls": 0, "data_calls": 0,
                       "cache_hits": 0, "retries": 0,
                       "meta_batched_ops": 0, "meta_saved_roundtrips": 0,
-                      "hedged_reads": 0, "ra_hits": 0}
-        self.sync_partitions()
+                      "hedged_reads": 0, "ra_hits": 0,
+                      # ---- metadata session (lease/version) counters ----
+                      "meta_cache_hits": 0, "meta_cache_misses": 0,
+                      "neg_hits": 0, "lease_revalidations": 0,
+                      "meta_stale_max_us": 0.0,
+                      "rm_syncs_suppressed": 0}
+        # lease/version session over the inode/dentry caches (TTL knobs
+        # CFS_META_TTL / CFS_META_NEG_TTL; ttl 0 = seed sync-on-open)
+        from .meta_session import MetaSession
+        self.session = MetaSession(self)
+        # routing-miss resync limiter (one RM round-trip per window)
+        self.sync_window_us = SYNC_WINDOW_US
+        self._last_sync_us: Optional[float] = None
+        self.sync_partitions(force=True)
 
     # ------------------------------------------------------------------ RM
-    def sync_partitions(self) -> None:
-        """One-shot RPC to the RM (non-persistent connection)."""
+    def sync_partitions(self, force: bool = False) -> bool:
+        """One-shot RPC to the RM (non-persistent connection).
+
+        Unforced calls come from routing misses and are rate-limited to one
+        round-trip per ``sync_window_us`` of virtual time: a burst of
+        misses (e.g. a split-fresh inode range fanned across many procs)
+        costs ONE RM exchange, the rest reuse the just-fetched view.
+        Returns False when the sync was suppressed.  A suppressed miss can
+        therefore surface a NotFound that a fresh view would have resolved
+        — deliberate *bounded routing staleness*, capped at one window
+        (default 1 ms of virtual time, three orders of magnitude tighter
+        than the 1 s metadata lease TTL the namespace already tolerates);
+        recovery paths always ``force`` and are never stale."""
+        op = self.net.current_op
+        now = op.now_us if op is not None and op.timed else None
+        if (not force and now is not None and self._last_sync_us is not None
+                and self.sync_window_us > 0
+                and 0.0 <= now - self._last_sync_us < self.sync_window_us):
+            # strictly within the window: suppress.  A NEGATIVE delta (this
+            # op's timeline starts before the last sync — e.g. a new
+            # benchmark phase restarting virtual time) is out-of-window:
+            # suppressing there would cap nothing and could starve resyncs
+            # for the rest of the phase.
+            self.stats["rm_syncs_suppressed"] += 1
+            return False
         leader = self.rm.leader_id()
         view = self.net.call(self.client_id, leader, self.rm.client_view,
                              self.volume, kind="client.rm")
         self.stats["rm_calls"] += 1
         self.meta_partitions = [_MetaPartition(**m) for m in view["meta"]]
         self.data_partitions = [_DataPartition(**d) for d in view["data"]]
+        if now is not None:
+            self._last_sync_us = op.now_us      # the reply's arrival time
+        return True
 
     def _next_seq(self) -> int:
         self._seq += 1
@@ -218,10 +266,10 @@ class CfsClient:
         for mp in self.meta_partitions:
             if mp.start <= ino <= mp.end:
                 return mp
-        self.sync_partitions()
-        for mp in self.meta_partitions:
-            if mp.start <= ino <= mp.end:
-                return mp
+        if self.sync_partitions():      # miss: resync (rate-limited)
+            for mp in self.meta_partitions:
+                if mp.start <= ino <= mp.end:
+                    return mp
         raise NotFound(f"no meta partition covers inode {ino}")
 
     def _writable_mps(self) -> List[_MetaPartition]:
@@ -244,6 +292,10 @@ class CfsClient:
                         kind="client.meta")
                     self.stats["meta_calls"] += 1
                     self.leader_cache[gid] = nid
+                    # session write-through: refresh/drop the cached entries
+                    # this mutation touched (read-your-writes, zero staleness
+                    # for the mutating client)
+                    self.session.note_mutation(payload, res)
                     return res
                 except NotLeader as e:
                     last_err = e
@@ -257,15 +309,21 @@ class CfsClient:
             order = list(mp.replicas)
         raise last_err
 
-    def _meta_read(self, mp: _MetaPartition, op: str, *args: Any) -> Any:
+    def _meta_read(self, mp: _MetaPartition, op: str, *args: Any,
+                   method: str = "read", reply_bytes: int = 64) -> Any:
+        """Leader-local read with replica failover.  ``method="read_leased"``
+        returns the session envelope (value + partition mvcc + TTL grant);
+        ``reply_bytes`` sizes the reply on the wire — ``stat_version``
+        replies are a fraction of a full inode refetch."""
         gid = f"mp{mp.pid}"
         order = self._read_order(gid, mp.replicas)
         last_err: Exception = NotFound(gid)
         for nid in order:
             try:
                 res = self.net.call(
-                    self.client_id, nid, self.meta_nodes[nid].read,
-                    mp.pid, op, *args, kind="client.meta")
+                    self.client_id, nid, getattr(self.meta_nodes[nid], method),
+                    mp.pid, op, *args, reply_bytes=reply_bytes,
+                    kind="client.meta")
                 self.stats["meta_calls"] += 1
                 self.read_affinity[gid] = nid
                 return res
@@ -301,7 +359,7 @@ class CfsClient:
     def _writable_dps(self) -> List[_DataPartition]:
         dps = [dp for dp in self.data_partitions if dp.status == "rw"]
         if not dps:
-            self.sync_partitions()
+            self.sync_partitions(force=True)
             dps = [dp for dp in self.data_partitions if dp.status == "rw"]
         if not dps:
             # volume ran out of writable partitions — the RM auto-expands
@@ -314,7 +372,7 @@ class CfsClient:
                 # RM unreachable or out of allocatable nodes: stay in the
                 # client's error channel, don't leak the RM internals
                 pass
-            self.sync_partitions()
+            self.sync_partitions(force=True)
             dps = [dp for dp in self.data_partitions if dp.status == "rw"]
         if not dps:
             raise FsError("no writable data partitions")
@@ -329,10 +387,10 @@ class CfsClient:
         for dp in self.data_partitions:
             if dp.pid == pid:
                 return dp
-        self.sync_partitions()
-        for dp in self.data_partitions:
-            if dp.pid == pid:
-                return dp
+        if self.sync_partitions():      # miss: resync (rate-limited)
+            for dp in self.data_partitions:
+                if dp.pid == pid:
+                    return dp
         raise NotFound(f"data partition {pid}")
 
     def _data_call(self, dp: _DataPartition, method: str, *args: Any,
@@ -420,10 +478,8 @@ class CfsClient:
         last: Exception = FsError("no writable meta partitions")
         for mp in mps:
             try:
-                inode = self._meta_propose(
+                return self._meta_propose(
                     mp, ("create_inode", itype, link_target, 0.0), seq=seq)
-                self.inode_cache[inode["inode"]] = inode
-                return inode
             except (PartitionFull, RangeExhausted) as e:
                 last = e
                 continue
@@ -435,15 +491,13 @@ class CfsClient:
                           kind="client.rm")
         except (NetError, RuntimeError):
             pass        # RM can't help; the retry below reports the truth
-        self.sync_partitions()
+        self.sync_partitions(force=True)
         mps = self._writable_mps()
         self.rng.shuffle(mps)
         for mp in mps:
             try:
-                inode = self._meta_propose(
+                return self._meta_propose(
                     mp, ("create_inode", itype, link_target, 0.0), seq=seq)
-                self.inode_cache[inode["inode"]] = inode
-                return inode
             except (PartitionFull, RangeExhausted) as e:
                 last = e
                 continue
@@ -478,13 +532,8 @@ class CfsClient:
                 except (PartitionFull, RangeExhausted):
                     res = None      # partition can't allocate; scatter below
                 if res is not None:
-                    inode = res[0]
-                    ino = inode["inode"]
-                    self.inode_cache[ino] = inode
-                    self.dentry_cache[(parent, name)] = {
-                        "parent": parent, "name": name, "inode": ino,
-                        "type": itype}
-                    return inode
+                    # the propose hook noted inode + dentry into the session
+                    return res[0]
         inode = self.create_inode(itype, link_target)
         ino = inode["inode"]
         try:
@@ -501,8 +550,6 @@ class CfsClient:
         if itype == InodeType.DIR:
             # subdirectory contributes ".." to the parent
             self._meta_propose(self._mp_for_inode(parent), ("link_inc", parent))
-        self.dentry_cache[(parent, name)] = {
-            "parent": parent, "name": name, "inode": ino, "type": itype}
         return inode
 
     def _create_dentry(self, parent: int, name: str, ino: int,
@@ -534,7 +581,6 @@ class CfsClient:
             dentry = self._meta_propose(mp_p, ("delete_dentry", parent, name))
         except NoSuchDentry:
             raise NotFound(f"{parent}/{name}")
-        self.dentry_cache.pop((parent, name), None)
         ino = dentry["inode"]
         try:
             mp_i = self._mp_for_inode(ino)
@@ -547,7 +593,7 @@ class CfsClient:
         thresh = 2 if inode["type"] == InodeType.DIR else 0
         if inode["nlink"] <= thresh:
             self.orphan_inodes.append(ino)
-        self.inode_cache.pop(ino, None)
+        self.session.forget_inode(ino)
         return ino
 
     def remove(self, parent: int, name: str, ino: int,
@@ -587,8 +633,7 @@ class CfsClient:
                 self._meta_propose(mp_p, ("unlink_dec", parent))
             self.evict_orphans()
             return None
-        self.dentry_cache.pop((parent, name), None)
-        self.inode_cache.pop(ino, None)
+        self.session.forget_inode(ino)
         evict_res: Optional[Dict] = None
         if colocated:
             evict_res = res[2]
@@ -656,10 +701,8 @@ class CfsClient:
             if itype == InodeType.DIR and cross_dir:
                 self._meta_propose(mp_src, ("unlink_dec", src_parent))
             self._meta_propose(mp_i, ("unlink_dec", ino))
-        self.dentry_cache.pop((src_parent, src_name), None)
-        self.dentry_cache[(dst_parent, dst_name)] = {
-            "parent": dst_parent, "name": dst_name, "inode": ino,
-            "type": itype}
+        # the propose hook dropped the src dentry (negative entry) and noted
+        # the dst dentry into the session as the batch/scatter ops landed
 
     def evict_orphans(self) -> int:
         """Send evict for locally tracked orphans; free their data (async)."""
@@ -702,76 +745,43 @@ class CfsClient:
                     continue
 
     # ---- lookups -------------------------------------------------------------
+    # Thin compat shims over the MetaSession surface: the session decides
+    # between the lease/version contract (timed op, TTL > 0) and the seed
+    # paths (untimed, or CFS_META_TTL=0).  New code — the VFS, benchmarks —
+    # talks to ``client.session`` directly.
     def lookup(self, parent: int, name: str, use_cache: bool = True) -> Dict:
-        if use_cache and (parent, name) in self.dentry_cache:
-            self.stats["cache_hits"] += 1
-            return self.dentry_cache[(parent, name)]
-        mp = self._mp_for_inode(parent)
-        try:
-            d = self._meta_read(mp, "lookup", parent, name)
-        except NoSuchDentry:
-            self.dentry_cache.pop((parent, name), None)
-            raise NotFound(f"{parent}/{name}")
-        self.dentry_cache[(parent, name)] = d
-        return d
+        return self.session.lookup(parent, name, authoritative=not use_cache)
 
     def get_inode(self, ino: int, use_cache: bool = False) -> Dict:
-        if use_cache and ino in self.inode_cache:
-            self.stats["cache_hits"] += 1
-            return self.inode_cache[ino]
-        mp = self._mp_for_inode(ino)
-        try:
-            inode = self._meta_read(mp, "get_inode", ino)
-        except NoSuchInode:
-            raise NotFound(f"inode {ino}")
-        self.inode_cache[ino] = inode
-        return inode
+        return self.session.getattr(ino, use_cache=use_cache)
 
     def readdir(self, parent: int) -> List[Dict]:
-        mp = self._mp_for_inode(parent)
-        return self._meta_read(mp, "read_dir", parent)
+        return self.session.readdir(parent)
 
     def readdir_plus(self, parent: int) -> List[Dict]:
         """DirStat path (§4.2): readdir, then ONE batchInodeGet per meta
         partition instead of per-file inodeGet; results cached client-side."""
-        dentries = self.readdir(parent)
-        by_mp: Dict[int, List[int]] = {}
-        missing = []
-        out: Dict[int, Dict] = {}
-        for d in dentries:
-            ino = d["inode"]
-            if ino in self.inode_cache:
-                self.stats["cache_hits"] += 1
-                out[ino] = self.inode_cache[ino]
-            else:
-                missing.append(ino)
-        for ino in missing:
-            mp = self._mp_for_inode(ino)
-            by_mp.setdefault(mp.pid, []).append(ino)
-        for pid, inos in by_mp.items():
-            mp = next(m for m in self.meta_partitions if m.pid == pid)
-            for iv in self._meta_read(mp, "batch_inode_get", inos):
-                self.inode_cache[iv["inode"]] = iv
-                out[iv["inode"]] = iv
-        return [
-            {**d, "attr": out.get(d["inode"])} for d in dentries
-        ]
+        return self.session.readdir_plus(parent)
 
     def update_extents(self, ino: int, size: int,
                        extents: List[ExtentKey]) -> Dict:
         mp = self._mp_for_inode(ino)
-        inode = self._meta_propose(
+        # the propose hook notes the returned inode view into the session
+        return self._meta_propose(
             mp, ("update_extents", ino, size,
                  [e.as_tuple() for e in extents], 0.0))
-        self.inode_cache[ino] = inode
-        return inode
 
     # ============================================================== file I/O
     def open(self, ino: int, mode: str = "r") -> "CfsFile":
-        """Open forces the cached metadata to re-sync with the meta node
-        (§2.4: 'when a file is opened for read/write, the client will force
-        the cached metadata to be synchronous')."""
-        inode = self.get_inode(ino, use_cache=False)
+        """Open used to force the cached metadata synchronous (§2.4); under
+        the session contract a READ open is served from a valid lease —
+        staleness is bounded by the TTL instead of a per-open round-trip.
+        A WRITE open stays server-fresh: the handle snapshots size/extents
+        and its close() replaces the server extent map wholesale, so a
+        stale view would destroy other clients' committed appends, not
+        just serve old bytes.  With ``CFS_META_TTL=0`` (or outside a timed
+        op) every open is the seed's force-sync."""
+        inode = self.session.getattr(ino, sync=mode != "r")
         if inode["type"] == InodeType.DIR:
             raise IsADirectory(str(ino))
         return CfsFile(self, inode, mode)
@@ -878,7 +888,7 @@ class CfsClient:
                                   self.rm.report_timeout, pid, kind="client.rm")
                 except NetError:
                     pass
-                self.sync_partitions()
+                self.sync_partitions(force=True)
                 dp = self._pick_dp()
                 pid = dp.pid
                 eid = self._new_extent_id(dp)
@@ -913,13 +923,13 @@ class CfsClient:
                                   kind="client.rm")
                 except NetError:
                     pass
-                self.sync_partitions()
+                self.sync_partitions(force=True)
                 continue
             if committed >= len(data):
                 return [ExtentKey(dp.pid, eid, 0, off, len(data))]
             # failed mid-chain: partition went RO; retry elsewhere (the
             # committed copy is unreferenced garbage reclaimed by punch-hole)
-            self.sync_partitions()
+            self.sync_partitions(force=True)
         raise FsError("small write failed on all partitions")
 
     def read_extents(self, inode: Dict, offset: int, size: int,

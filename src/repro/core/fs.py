@@ -86,9 +86,9 @@ class CfsCluster:
 
     # ---- volumes ---------------------------------------------------------------
     def create_volume(self, name: str, n_meta_partitions: int = 3,
-                      n_data_partitions: int = 10) -> None:
+                      n_data_partitions: int = 10, replicas: int = 3) -> None:
         self.rm.create_volume(name, n_meta=n_meta_partitions,
-                              n_data=n_data_partitions)
+                              n_data=n_data_partitions, replicas=replicas)
         # initialize the root directory inode (id 1) on the partition whose
         # inode range covers id 1
         boot = CfsClient("boot", self.net, self.rm, self.meta_nodes,

@@ -19,10 +19,21 @@ Relaxed metadata atomicity (§2.6): inode and dentry of one file may live on
 workflows, not transactions.  The invariant maintained is one-directional:
 a dentry always references an inode that was created first; failures can only
 leave orphan *inodes* (never dangling dentries), which the client evicts.
+
+Metadata sessions (the client-cache contract, §2.4 redesigned): every
+mutation — batch sub-ops included — bumps the partition's monotonic ``mvcc``
+counter and stamps the touched inode/dentry with it (``mv``).  Reads served
+through ``MetaNode.read_leased`` return an envelope carrying the partition
+``mvcc`` and a TTL lease grant; a client holding an *expired* entry
+revalidates it with the cheap ``stat_version`` read (compare ``mv``, renew
+the lease) instead of refetching the whole object.  This replaces the
+paper's force-sync-on-open: staleness is bounded by the lease TTL instead
+of a per-open round-trip.
 """
 
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
@@ -39,6 +50,12 @@ __all__ = ["MetaNode", "MetaPartitionSM", "MetaError", "NoSuchInode",
 # rough per-entry memory cost used for utilization-based placement
 INODE_MEM_BYTES = 300
 DENTRY_MEM_BYTES = 120
+
+# Lease TTL granted on read replies (virtual µs).  The client caps its own
+# cache validity at min(client TTL, server grant); both default to the same
+# knob so one env var tunes the whole contract.  0 = grant nothing (clients
+# fall back to the seed's sync-on-open path).
+META_LEASE_US = float(os.environ.get("CFS_META_TTL", "1000000"))
 
 
 class MetaError(Exception):
@@ -79,6 +96,11 @@ class MetaPartitionSM(StateMachine):
         self.dentry_tree = BTree()
         self.free_list: List[int] = []      # paper's freeList
         self.max_entries = max_entries
+        # monotonic partition version: bumped once per applied mutation
+        # (batch sub-ops included); entries are stamped with the mvcc of
+        # the mutation that last touched them (``mv``)
+        self.mvcc = 0
+        self.lease_us = META_LEASE_US       # TTL granted on leased reads
 
     # ---- sizing (drives placement + splitting) ------------------------------
     @property
@@ -97,8 +119,17 @@ class MetaPartitionSM(StateMachine):
         return self.entries < self.max_entries and self.cursor < self.end
 
     # ---- raft apply ----------------------------------------------------------
+    # ops that advance the partition mvcc; "batch" bumps through its sub-ops
+    MUTATORS = {"create_inode", "create_dentry", "delete_dentry", "link_inc",
+                "unlink_dec", "evict", "update_extents", "set_end"}
+
     def apply(self, payload: Any) -> Any:
         op, args = payload[0], payload[1:]
+        if op in self.MUTATORS:
+            # bump BEFORE dispatch so the handler stamps entries with the
+            # version of this very mutation; deterministic across replicas
+            # (followers apply the same committed entries in order)
+            self.mvcc += 1
         return getattr(self, "_ap_" + op)(*args)
 
     # -- inode ops
@@ -114,7 +145,7 @@ class MetaPartitionSM(StateMachine):
             ino = self.cursor
         nlink = 2 if itype == InodeType.DIR else 1
         inode = Inode(inode=ino, type=itype, link_target=link_target,
-                      nlink=nlink, ctime=now, mtime=now)
+                      nlink=nlink, ctime=now, mtime=now, mv=self.mvcc)
         self.inode_tree.put(ino, inode)
         return _inode_view(inode)
 
@@ -122,6 +153,7 @@ class MetaPartitionSM(StateMachine):
         inode = self._inode(ino)
         inode.nlink += 1
         inode.gen += 1
+        inode.mv = self.mvcc
         return _inode_view(inode)
 
     def _ap_unlink_dec(self, ino: int) -> Dict:
@@ -132,6 +164,7 @@ class MetaPartitionSM(StateMachine):
         inode = self._inode(ino)
         inode.nlink = max(0, inode.nlink - 1)
         inode.gen += 1
+        inode.mv = self.mvcc
         if inode.type == InodeType.DIR:
             if inode.nlink <= 1:
                 inode.flag = InodeFlag.MARK_DELETED
@@ -162,6 +195,7 @@ class MetaPartitionSM(StateMachine):
         inode.extents = [ExtentKey(*e) for e in extents]
         inode.mtime = mtime
         inode.gen += 1
+        inode.mv = self.mvcc
         return _inode_view(inode)
 
     # -- dentry ops
@@ -176,7 +210,8 @@ class MetaPartitionSM(StateMachine):
         # inode's partition, and a "full" partition still accepts
         # modifications (§2.3.1: "it can still be modified or deleted");
         # only NEW inode allocation is blocked.
-        d = Dentry(parent_id=parent, name=name, inode=ino, type=dtype)
+        d = Dentry(parent_id=parent, name=name, inode=ino, type=dtype,
+                   mv=self.mvcc)
         self.dentry_tree.put(key, d)
         # a directory gains nlink via its child's ".."; handled by client calling
         # link_inc on the parent for subdirectories.
@@ -276,6 +311,20 @@ class MetaPartitionSM(StateMachine):
             raise NoSuchDentry(f"{parent}/{name}")
         return _dentry_view(d)
 
+    def stat_version(self, kind: str, key: Any) -> Dict:
+        """The session revalidation read: return just the ``mv`` stamp of
+        one inode (``kind="inode"``, key = inode id) or dentry
+        (``kind="dentry"``, key = (parent, name)) plus the partition mvcc —
+        a tiny reply that lets a client renew an expired lease on an
+        unchanged entry without refetching the whole object.  ``mv == -1``
+        means the entry is gone (the caller turns that into a negative
+        cache entry)."""
+        if kind == "inode":
+            e = self.inode_tree.get(key)
+        else:
+            e = self.dentry_tree.get(tuple(key))
+        return {"mv": e.mv if e is not None else -1, "mvcc": self.mvcc}
+
     def read_dir(self, parent: int) -> List[Dict]:
         hi = (parent, "\U0010ffff")
         return [_dentry_view(d) for _, d in self.dentry_tree.range((parent, ""), hi)]
@@ -288,14 +337,16 @@ class MetaPartitionSM(StateMachine):
             "start": self.start,
             "end": self.end,
             "cursor": self.cursor,
+            "mvcc": self.mvcc,
             "free": list(self.free_list),
             "inodes": [
                 (i.inode, i.type, bytes(i.link_target), i.nlink, i.flag, i.size,
-                 [e.as_tuple() for e in i.extents], i.ctime, i.mtime, i.gen)
+                 [e.as_tuple() for e in i.extents], i.ctime, i.mtime, i.gen,
+                 i.mv)
                 for _, i in self.inode_tree.items()
             ],
             "dentries": [
-                (d.parent_id, d.name, d.inode, d.type)
+                (d.parent_id, d.name, d.inode, d.type, d.mv)
                 for _, d in self.dentry_tree.items()
             ],
         }
@@ -307,16 +358,18 @@ class MetaPartitionSM(StateMachine):
         self.start = snap["start"]
         self.end = snap["end"]
         self.cursor = snap["cursor"]
+        self.mvcc = snap["mvcc"]
         self.free_list = list(snap["free"])
         self.inode_tree = BTree()
         self.dentry_tree = BTree()
-        for (ino, t, lt, nlink, flag, size, exts, ct, mt, gen) in snap["inodes"]:
+        for (ino, t, lt, nlink, flag, size, exts, ct, mt, gen,
+             mv) in snap["inodes"]:
             self.inode_tree.put(ino, Inode(
                 inode=ino, type=t, link_target=lt, nlink=nlink, flag=flag,
                 size=size, extents=[ExtentKey(*e) for e in exts],
-                ctime=ct, mtime=mt, gen=gen))
-        for (p, n, i, t) in snap["dentries"]:
-            self.dentry_tree.put((p, n), Dentry(p, n, i, t))
+                ctime=ct, mtime=mt, gen=gen, mv=mv))
+        for (p, n, i, t, mv) in snap["dentries"]:
+            self.dentry_tree.put((p, n), Dentry(p, n, i, t, mv=mv))
 
 
 def _resolve_refs(sub: Tuple, results: List[Any]) -> Tuple:
@@ -334,14 +387,14 @@ def _inode_view(i: Inode) -> Dict:
     return {
         "inode": i.inode, "type": i.type, "nlink": i.nlink, "flag": i.flag,
         "size": i.size, "extents": [e.as_tuple() for e in i.extents],
-        "ctime": i.ctime, "mtime": i.mtime, "gen": i.gen,
+        "ctime": i.ctime, "mtime": i.mtime, "gen": i.gen, "mv": i.mv,
         "link_target": bytes(i.link_target),
     }
 
 
 def _dentry_view(d: Dentry) -> Dict:
     return {"parent": d.parent_id, "name": d.name, "inode": d.inode,
-            "type": d.type}
+            "type": d.type, "mv": d.mv}
 
 
 class MetaNode:
@@ -394,6 +447,15 @@ class MetaNode:
         consistency; no quorum read — the paper's relaxed semantics)."""
         sm = self.partitions[partition_id]
         return getattr(sm, op)(*args)
+
+    def read_leased(self, partition_id: int, op: str, *args: Any) -> Dict:
+        """Session read: same leader-local read, wrapped in an envelope that
+        grants a TTL lease and carries the partition mvcc.  Errors (e.g.
+        NoSuchDentry) propagate unleased — the client stamps its negative
+        entries with its own (shorter) negative TTL."""
+        sm = self.partitions[partition_id]
+        return {"v": getattr(sm, op)(*args),
+                "mvcc": sm.mvcc, "lease_us": sm.lease_us}
 
     # ---- reporting -----------------------------------------------------------------
     def mem_used(self) -> int:

@@ -52,6 +52,7 @@ class MultiRaftHost:
         member = RaftMember(
             group_id, self.node_id, peers, sm,
             send=lambda dst, msg, gid=group_id: self._send(dst, msg),
+            net=self.net,       # timed ops fan out the append legs
         )
         self.groups[group_id] = member
         return member

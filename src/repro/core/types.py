@@ -76,13 +76,17 @@ class Inode:
     ctime: float = 0.0
     mtime: float = 0.0
     gen: int = 0                    # bumped on every metadata mutation
+    # partition mvcc version of the LAST mutation that touched this inode —
+    # the token a client's `stat_version` revalidation compares against
+    # (unlike ``gen``, it is comparable across entries of one partition)
+    mv: int = 0
 
     def clone(self) -> "Inode":
         return Inode(
             inode=self.inode, type=self.type, link_target=self.link_target,
             nlink=self.nlink, flag=self.flag, size=self.size,
             extents=[ExtentKey(*e.as_tuple()) for e in self.extents],
-            ctime=self.ctime, mtime=self.mtime, gen=self.gen,
+            ctime=self.ctime, mtime=self.mtime, gen=self.gen, mv=self.mv,
         )
 
 
@@ -94,6 +98,7 @@ class Dentry:
     name: str
     inode: int
     type: int = InodeType.FILE
+    mv: int = 0                     # partition mvcc version of the creation
 
     def key(self) -> Tuple[int, str]:
         return (self.parent_id, self.name)

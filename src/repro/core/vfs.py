@@ -9,11 +9,19 @@ single ``CfsOSError(errno, path)`` error channel in place of the ad-hoc
 exception zoo — exactly what a FUSE lowering or an mdtest/fio harness
 expects to talk to.
 
-Relaxed semantics are unchanged from the paper: sequential consistency per
-op, no leases, no cross-client atomicity for overlapping writes.  What IS
-new underneath is the metadata round-trip shape: namespace mutations go
-through ``CfsClient.meta_batch``-style coalesced RPCs (λFS/AsyncFS-style),
-so an ``open(O_CREAT)`` that allocates inode + dentry on one partition is a
+Metadata consistency is the **session contract** (lease/version, see
+``repro.core.meta_session``): path resolution, ``stat``, ``open`` and
+``readdir`` are served from versioned cache entries while their TTL leases
+hold — ``open`` no longer force-syncs — with negative dentries answering
+repeated ENOENT probes and mvcc ``stat_version`` revalidation for expired
+entries.  Staleness against OTHER clients' mutations is bounded by one
+TTL; this client's own mutations invalidate locally and immediately.
+``CFS_META_TTL=0`` restores the paper's seed semantics (sync-on-open, no
+leases).  No cross-client atomicity for overlapping writes, as before.
+
+The metadata round-trip shape is batched (λFS/AsyncFS-style): namespace
+mutations go through ``CfsClient.meta_batch``-style coalesced RPCs, so an
+``open(O_CREAT)`` that allocates inode + dentry on one partition is a
 single raft round-trip instead of two, and ``unlink`` collapses dentry
 delete + nlink decrement + eviction the same way.
 """
@@ -118,13 +126,29 @@ class CfsVfs:
         self._next_fd = 3
 
     # ------------------------------------------------------- path resolution
-    def _resolve(self, path: str, parent_only: bool = False
+    def _resolve(self, path: str, parent_only: bool = False,
+                 for_update: bool = False
                  ) -> Tuple[int, str, Optional[Dict]]:
         """Walk ``path`` from the root; returns (parent_ino, leaf, dentry).
 
-        Directory components resolve through the dentry cache; the leaf
-        lookup is authoritative (a stale cache entry must not resurrect a
-        file another client unlinked)."""
+        All components resolve through the metadata session: interior
+        directories and the leaf are served from leased dentry entries
+        (negative entries answer cached ENOENT), so a hot path walk costs
+        zero RPCs while the leases hold.  The leaf is still *authoritative*
+        under the seed contract (``CFS_META_TTL=0`` / untimed): there a
+        stale cache entry must not resurrect a file another client
+        unlinked, so it always pays the lookup RPC.
+
+        ``for_update`` marks a resolution whose result PARAMETERIZES a
+        mutation (unlink/rmdir/rename/link): the leaf bypasses the lease
+        and resolves server-fresh even under an active session — a
+        TTL-stale dentry there would feed the wrong inode into batched
+        unlink_dec/evict ops and destroy live data, not just serve an old
+        read.  Interior components keep the cached walk in BOTH contracts
+        (the seed cached them unconditionally and forever; leases tighten
+        that exposure to one TTL) — a concurrently renamed ancestor
+        directory can therefore still route a mutation through its old
+        parent inode for up to one TTL, as it always could."""
         norm = posixpath.normpath(path)
         if not norm.startswith("/"):
             raise CfsOSError(errno.EINVAL, path)
@@ -133,11 +157,12 @@ class CfsVfs:
         if norm == "/":
             return (0, "/", {"parent": 0, "name": "/", "inode": ROOT_INODE,
                              "type": InodeType.DIR})
+        session = self.client.session
         parts = [p for p in norm.split("/") if p]
         parent = ROOT_INODE
         for comp in parts[:-1]:
             try:
-                d = self.client.lookup(parent, comp)
+                d = session.lookup(parent, comp)
             except NotFound:
                 raise CfsOSError(errno.ENOENT, path)
             if d["type"] != InodeType.DIR:
@@ -147,7 +172,8 @@ class CfsVfs:
         if parent_only:
             return (parent, leaf, None)
         try:
-            dentry = self.client.lookup(parent, leaf, use_cache=False)
+            dentry = session.lookup(parent, leaf, authoritative=True,
+                                    sync=for_update)
         except NotFound:
             dentry = None
         return (parent, leaf, dentry)
@@ -207,7 +233,10 @@ class CfsVfs:
                 if flags & O_EXCL:
                     raise CfsOSError(errno.EEXIST, path)
                 try:
-                    dentry = self.client.lookup(parent, leaf, use_cache=False)
+                    # the server just proved the name exists (EEXIST), which
+                    # outranks any cached negative entry — sync lookup
+                    dentry = self.client.session.lookup(
+                        parent, leaf, authoritative=True, sync=True)
                 except NotFound:
                     raise CfsOSError(errno.ENOENT, path)
             except (FsError, MetaError) as e:
@@ -365,12 +394,14 @@ class CfsVfs:
         return inode["inode"]
 
     def rmdir(self, path: str) -> None:
-        parent, leaf, dentry = self._resolve(path)
+        parent, leaf, dentry = self._resolve(path, for_update=True)
         if dentry is None:
             raise CfsOSError(errno.ENOENT, path)
         if dentry["type"] != InodeType.DIR:
             raise CfsOSError(errno.ENOTDIR, path)
-        if self.client.readdir(dentry["inode"]):
+        # the emptiness gate must be server-fresh: a stale-empty leased
+        # listing would delete a directory another client just populated
+        if self.client.session.readdir(dentry["inode"], sync=True):
             raise CfsOSError(errno.ENOTEMPTY, path)
         try:
             # dentry delete + dir nlink dec + evict + parent ".." dec — one
@@ -381,7 +412,7 @@ class CfsVfs:
             raise _oserror(e, path)
 
     def unlink(self, path: str) -> None:
-        parent, leaf, dentry = self._resolve(path)
+        parent, leaf, dentry = self._resolve(path, for_update=True)
         if dentry is None:
             raise CfsOSError(errno.ENOENT, path)
         if dentry["type"] == InodeType.DIR:
@@ -396,12 +427,12 @@ class CfsVfs:
         both parents share a partition, otherwise the paper's relaxed
         metadata atomicity.  Existing dst is an error (no implicit replace
         under relaxed semantics)."""
-        src_parent, src_leaf, src_dentry = self._resolve(src)
+        src_parent, src_leaf, src_dentry = self._resolve(src, for_update=True)
         if src_dentry is None:
             raise CfsOSError(errno.ENOENT, src)
         if src_dentry["inode"] == ROOT_INODE:
             raise CfsOSError(errno.EINVAL, src)     # can't move the root
-        dst_parent, dst_leaf, dst_dentry = self._resolve(dst)
+        dst_parent, dst_leaf, dst_dentry = self._resolve(dst, for_update=True)
         if dst_dentry is not None:
             if dst_dentry["inode"] == src_dentry["inode"]:
                 return      # rename(2): same inode -> no-op success
@@ -419,8 +450,13 @@ class CfsVfs:
             raise _oserror(e, src)
 
     def link(self, src: str, dst: str) -> None:
-        src_ino = self.path_inode(src)
-        parent, leaf, dentry = self._resolve(dst)
+        # both sides are mutation inputs: the new dentry will reference
+        # src's inode (a stale one would dangle), and dst gates EEXIST
+        _, _, src_dentry = self._resolve(src, for_update=True)
+        if src_dentry is None:
+            raise CfsOSError(errno.ENOENT, src)
+        src_ino = src_dentry["inode"]
+        parent, leaf, dentry = self._resolve(dst, for_update=True)
         if dentry is not None:
             raise CfsOSError(errno.EEXIST, dst)
         try:
@@ -429,7 +465,7 @@ class CfsVfs:
             raise _oserror(e, dst)
 
     def symlink(self, target: str, linkpath: str) -> None:
-        parent, leaf, dentry = self._resolve(linkpath)
+        parent, leaf, dentry = self._resolve(linkpath, for_update=True)
         if dentry is not None:
             raise CfsOSError(errno.EEXIST, linkpath)
         try:
@@ -446,7 +482,9 @@ class CfsVfs:
 
     def _stat_inode(self, path: str) -> Dict:
         try:
-            return self.client.get_inode(self.path_inode(path))
+            # session surface: a valid lease answers the getattr; the seed
+            # contract (TTL=0) refetches — the old force-sync stat
+            return self.client.session.getattr(self.path_inode(path))
         except NotFound:
             raise CfsOSError(errno.ENOENT, path)
 
@@ -461,14 +499,18 @@ class CfsVfs:
             return False
 
     def readdir(self, path: str) -> List[str]:
+        """opendir/readdir: the listing is served from the session's leased
+        per-directory cache while the lease holds (invalidated by local
+        creates/deletes under the directory)."""
         ino, _ = self._dir_inode(path)
-        return [d["name"] for d in self.client.readdir(ino)]
+        return [d["name"] for d in self.client.session.readdir(ino)]
 
     def readdir_plus(self, path: str) -> List[Dict]:
         """readdir + attrs in one pass — the paper's batchInodeGet DirStat
-        path (§4.2): ONE batched inode fetch per meta partition."""
+        path (§4.2): ONE batched inode fetch per meta partition, and only
+        for the inodes whose leases do not already answer."""
         ino, _ = self._dir_inode(path)
-        return self.client.readdir_plus(ino)
+        return self.client.session.readdir_plus(ino)
 
     def _dir_chain(self, path: str) -> List[int]:
         """Inodes of every directory on ``path``'s parent chain (root

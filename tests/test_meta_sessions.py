@@ -1,0 +1,450 @@
+"""Lease-based metadata sessions (ISSUE-4 acceptance properties).
+
+Covers:
+  * per-partition mvcc stamping of inode/dentry mutations (batch included),
+  * open/stat served from leased cache entries — no force-sync-on-open,
+  * ``CFS_META_TTL=0`` (session TTL 0) reproduces the seed sync-on-open
+    RPC pattern,
+  * staleness bounds: a reader never observes a value older than its lease
+    grant, and converges to a writer's mutation within one TTL,
+  * negative dentries: cached ENOENT with its own (shorter) TTL, cleared
+    immediately by the client's own create,
+  * mvcc revalidation: an expired-but-unchanged entry renews via the cheap
+    ``stat_version`` read instead of a full refetch,
+  * local mutations (unlink/rename/create) invalidate the session
+    immediately — read-your-writes with zero staleness,
+  * leased readdir with local invalidation,
+  * raft append-leg fan-out lowers meta-mutation latency (3/5 replicas),
+  * routing-miss ``sync_partitions`` bursts cost one RM round-trip per
+    virtual-time window,
+  * same-seed reruns of the new mdtest A/B suites are bit-identical.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+import repro.core.raft as raft_core
+from repro.core import (CfsCluster, NotFound, O_CREAT, O_RDONLY, O_TRUNC,
+                        O_WRONLY)
+
+
+def _cluster(seed: int = 42, replicas: int = 3, n_meta: int = 3):
+    c = CfsCluster(n_meta=n_meta, n_data=max(3, replicas + 1),
+                   extent_max_size=8 * 1024 * 1024, seed=seed)
+    c.create_volume("v", n_meta_partitions=3, n_data_partitions=4,
+                    replicas=replicas)
+    return c
+
+
+def _mk(vfs, path: str, data: bytes = b"") -> None:
+    fd = vfs.open(path, O_WRONLY | O_CREAT | O_TRUNC)
+    if data:
+        vfs.pwrite(fd, data, 0)
+    vfs.close(fd)
+
+
+class timed:
+    """Open a *timed* op at virtual time ``at`` — the session's lease clock
+    only runs inside timed ops (untimed calls take the seed paths)."""
+
+    def __init__(self, net, at: float):
+        self.net, self.at = net, at
+
+    def __enter__(self):
+        self.op = self.net.begin_op(at=self.at)
+        return self.op
+
+    def __exit__(self, *exc):
+        self.net.end_op()
+
+
+# --------------------------------------------------------------- mvcc stamps
+def test_mvcc_stamps_mutations_batch_included():
+    c = _cluster()
+    vfs = c.mount("v", client_id="w").vfs
+    sms = [sm for node in c.meta_nodes.values()
+           for sm in node.partitions.values()]
+    before = {id(sm): sm.mvcc for sm in sms}
+    _mk(vfs, "/f")          # coalesced create: inode + dentry, one batch
+    bumped = [sm for sm in sms if sm.mvcc > before[id(sm)]]
+    assert bumped, "create must advance some partition's mvcc"
+    # the leader applied BOTH batch sub-ops (followers catch up on the next
+    # append round, so they may trail by a commit)
+    assert max(sm.mvcc - before[id(sm)] for sm in bumped) >= 2
+    d = vfs.client.session.lookup(1, "f", authoritative=True)
+    inode = vfs.client.session.getattr(d["inode"])
+    assert d["mv"] > 0 and inode["mv"] > 0
+
+
+def test_stat_version_endpoint_reports_mv_and_absence():
+    c = _cluster()
+    vfs = c.mount("v", client_id="w").vfs
+    _mk(vfs, "/f")
+    d = vfs.client.session.lookup(1, "f", authoritative=True)
+    node = next(n for n in c.meta_nodes.values()
+                if any(p.dentry_tree.get((1, "f"))
+                       for p in n.partitions.values()))
+    pid = next(pid for pid, p in node.partitions.items()
+               if p.dentry_tree.get((1, "f")))
+    sv = node.read(pid, "stat_version", "dentry", (1, "f"))
+    assert sv["mv"] == d["mv"] and sv["mvcc"] >= sv["mv"]
+    assert node.read(pid, "stat_version", "dentry", (1, "nope"))["mv"] == -1
+
+
+# ------------------------------------------------------- lease-served opens
+def test_open_and_stat_served_from_lease():
+    c = _cluster()
+    vfs = c.mount("v", client_id="r").vfs
+    _mk(vfs, "/f", b"x" * 100)
+    st = vfs.client.stats
+    with timed(c.net, 0.0):
+        vfs.stat("/f")                      # cold: lookup + getattr RPCs
+    calls = st["meta_calls"]
+    with timed(c.net, 100.0):
+        vfs.stat("/f")
+        fd = vfs.open("/f", O_RDONLY)
+        vfs.close(fd)
+    assert st["meta_calls"] == calls, "lease-valid stat/open must cost 0 RPCs"
+    assert st["meta_cache_hits"] >= 3       # leaf dentry + inode, twice
+
+
+def test_ttl_zero_reproduces_sync_on_open_rpc_pattern():
+    c = _cluster()
+    vfs = c.mount("v", client_id="r").vfs
+    vfs.client.session.ttl_us = 0.0         # the seed contract
+    _mk(vfs, "/f", b"x")
+    st = vfs.client.stats
+    deltas = []
+    for t in (0.0, 100.0, 200.0):
+        calls = st["meta_calls"]
+        with timed(c.net, t):
+            fd = vfs.open("/f", O_RDONLY)
+            vfs.close(fd)
+        deltas.append(st["meta_calls"] - calls)
+    # every open pays the same authoritative leaf lookup + inode fetch
+    assert deltas[0] == deltas[1] == deltas[2] == 2
+    assert st["meta_cache_hits"] == 0 and st["neg_hits"] == 0
+
+
+# ------------------------------------------------------------ staleness bound
+def test_staleness_bounded_by_ttl_and_converges():
+    c = _cluster()
+    writer = c.mount("v", client_id="w").vfs
+    reader = c.mount("v", client_id="r").vfs
+    ttl = 1000.0
+    reader.client.session.ttl_us = ttl
+    _mk(writer, "/f", b"old" * 100)         # size 300
+    with timed(c.net, 0.0):
+        assert reader.stat("/f")["size"] == 300
+    # the writer grows the file AFTER the reader's lease grant
+    fd = writer.open("/f", O_WRONLY | O_CREAT | O_TRUNC)
+    writer.pwrite(fd, b"n" * 500, 0)
+    writer.close(fd)
+    with timed(c.net, 500.0):               # lease still valid: old OK
+        size_mid = reader.stat("/f")["size"]
+    assert size_mid in (300, 500)
+    with timed(c.net, 0.0 + ttl + 600.0):   # one TTL past the grant
+        assert reader.stat("/f")["size"] == 500, \
+            "reader must converge within one TTL"
+    # a served value is never older than its lease grant
+    assert reader.client.stats["meta_stale_max_us"] <= ttl
+
+
+# ---------------------------------------------------------- negative dentries
+def test_negative_dentry_cached_with_own_ttl():
+    c = _cluster()
+    writer = c.mount("v", client_id="w").vfs
+    reader = c.mount("v", client_id="r").vfs
+    reader.client.session.neg_ttl_us = 1000.0
+    st = reader.client.stats
+    with timed(c.net, 0.0):
+        assert not reader.exists("/nope")   # miss: NAK cached as negative
+    calls = st["meta_calls"]
+    with timed(c.net, 100.0):
+        assert not reader.exists("/nope")
+    assert st["meta_calls"] == calls and st["neg_hits"] == 1
+    _mk(writer, "/nope")                    # another client creates it
+    with timed(c.net, 500.0):               # inside the negative TTL
+        assert not reader.exists("/nope")
+    with timed(c.net, 1500.0):              # negative TTL expired
+        assert reader.exists("/nope")
+
+
+def test_own_create_clears_negative_entry_immediately():
+    c = _cluster()
+    vfs = c.mount("v", client_id="w").vfs
+    with timed(c.net, 0.0):
+        assert not vfs.exists("/mine")
+        _mk(vfs, "/mine")
+        assert vfs.exists("/mine"), \
+            "own create must invalidate the negative entry with no TTL wait"
+
+
+# ------------------------------------------------------------- revalidation
+def test_expired_lease_revalidates_without_refetch():
+    c = _cluster()
+    writer = c.mount("v", client_id="w").vfs
+    reader = c.mount("v", client_id="r").vfs
+    reader.client.session.ttl_us = 1000.0
+    _mk(writer, "/f", b"x")
+    st = reader.client.stats
+    with timed(c.net, 0.0):
+        first = reader.stat("/f")
+    misses = st["meta_cache_misses"]
+    with timed(c.net, 5000.0):              # lease expired, entry unchanged
+        second = reader.stat("/f")
+    assert second is first, "revalidation must keep the cached object"
+    assert st["lease_revalidations"] == 2   # leaf dentry + inode
+    assert st["meta_cache_misses"] == misses
+    # now the writer mutates; the next revalidation must detect and refetch
+    fd = writer.open("/f", O_WRONLY | O_CREAT | O_TRUNC)
+    writer.pwrite(fd, b"y" * 50, 0)
+    writer.close(fd)
+    with timed(c.net, 10000.0):
+        third = reader.stat("/f")
+    assert third is not first and third["size"] == 50
+    assert st["meta_cache_misses"] > misses
+
+
+# ------------------------------------------------- local mutation invalidation
+def test_unlink_and_rename_invalidate_locally():
+    c = _cluster()
+    vfs = c.mount("v", client_id="w").vfs
+    st = vfs.client.stats
+    with timed(c.net, 0.0):
+        _mk(vfs, "/a")
+        assert vfs.exists("/a")
+        vfs.unlink("/a")
+        calls = st["meta_calls"]
+        assert not vfs.exists("/a"), "own unlink must be visible at once"
+        # the deletion reply itself is authority: cached ENOENT, no RPC
+        assert st["meta_calls"] == calls
+        _mk(vfs, "/b")
+        vfs.rename("/b", "/c")
+        assert not vfs.exists("/b")
+        assert vfs.stat("/c")["size"] == 0
+
+
+def test_readdir_lease_and_local_invalidation():
+    c = _cluster()
+    vfs = c.mount("v", client_id="w").vfs
+    vfs.mkdir("/d")
+    _mk(vfs, "/d/x")
+    st = vfs.client.stats
+    with timed(c.net, 0.0):
+        assert vfs.readdir("/d") == ["x"]
+    calls = st["meta_calls"]
+    with timed(c.net, 100.0):
+        assert vfs.readdir("/d") == ["x"]   # served from the listing lease
+    assert st["meta_calls"] == calls
+    with timed(c.net, 200.0):
+        _mk(vfs, "/d/y")                    # local create drops the listing
+        assert sorted(vfs.readdir("/d")) == ["x", "y"]
+
+
+def test_readdir_plus_uses_leases_for_attrs():
+    c = _cluster()
+    vfs = c.mount("v", client_id="w").vfs
+    vfs.mkdir("/d")
+    for i in range(4):
+        _mk(vfs, f"/d/f{i}", b"z" * i)
+    st = vfs.client.stats
+    with timed(c.net, 0.0):
+        out = vfs.readdir_plus("/d")
+    assert {d["name"]: d["attr"]["size"] for d in out} == {
+        f"f{i}": i for i in range(4)}
+    calls = st["meta_calls"]
+    with timed(c.net, 100.0):
+        out2 = vfs.readdir_plus("/d")       # listing + attrs all leased
+    assert st["meta_calls"] == calls
+    assert [d["name"] for d in out2] == [d["name"] for d in out]
+
+
+# --------------------------------------- mutations must resolve server-fresh
+def test_unlink_through_stale_lease_does_not_evict_renamed_inode():
+    """Review regression: A leases /d/f, B renames it to /d/g and creates a
+    NEW /d/f.  A's unlink(/d/f) inside the TTL must target the new file —
+    never feed the leased (renamed) inode into unlink_dec/evict, which
+    would dangle B's /d/g and destroy its data."""
+    c = _cluster()
+    a = c.mount("v", client_id="a").vfs
+    b = c.mount("v", client_id="b").vfs
+    a.mkdir("/d")
+    _mk(b, "/d/f", b"payload" * 50)
+    with timed(c.net, 0.0):
+        old_ino = a.stat("/d/f")["inode"]       # A now leases f -> old_ino
+    b.rename("/d/f", "/d/g")
+    _mk(b, "/d/f", b"new")
+    with timed(c.net, 100.0):                   # well inside A's lease
+        a.unlink("/d/f")
+    # the renamed file survives, with its data; the new f is the one gone
+    assert b.stat("/d/g")["inode"] == old_ino
+    fd = b.open("/d/g", 0)
+    assert b.read(fd, -1) == b"payload" * 50
+    b.close(fd)
+    assert not b.exists("/d/f")
+
+
+def test_rmdir_through_stale_empty_listing_is_enotempty():
+    """Review regression: A leases an empty listing of /d, B creates /d/x.
+    A's rmdir(/d) inside the TTL must see the server's listing and fail
+    ENOTEMPTY — never delete a populated directory (dangling dentry)."""
+    import errno
+    from repro.core import CfsOSError
+
+    c = _cluster()
+    a = c.mount("v", client_id="a").vfs
+    b = c.mount("v", client_id="b").vfs
+    a.mkdir("/d")
+    with timed(c.net, 0.0):
+        assert a.readdir("/d") == []            # A leases the empty listing
+    _mk(b, "/d/x", b"z")
+    with timed(c.net, 100.0):                   # inside A's listing lease
+        with pytest.raises(CfsOSError) as ei:
+            a.rmdir("/d")
+        assert ei.value.errno == errno.ENOTEMPTY
+    assert b.stat("/d/x")["size"] == 1
+
+
+def test_write_open_through_stale_lease_does_not_drop_appends():
+    """Review regression: B leases /log's inode, A appends, B opens for
+    WRITE inside its TTL and appends+closes.  B's handle must start from
+    the server-fresh size — a leased view would make close()'s
+    update_extents erase A's committed append."""
+    c = _cluster()
+    a = c.mount("v", client_id="a").vfs
+    b = c.mount("v", client_id="b").vfs
+    from repro.core import O_WRONLY as _W, O_APPEND as _A
+    _mk(a, "/log", b"x" * 100)
+    with timed(c.net, 0.0):
+        assert b.stat("/log")["size"] == 100    # B leases the inode view
+    fd = a.open("/log", _W | _A)                # A appends 100 more
+    a.write(fd, b"y" * 100)
+    a.close(fd)
+    with timed(c.net, 100.0):                   # inside B's lease
+        fd = b.open("/log", _W | _A)
+        b.write(fd, b"z" * 50)
+        b.close(fd)
+    assert a.stat("/log")["size"] == 250, \
+        "write-open must be server-fresh; a stale view drops A's append"
+
+
+def test_o_creat_after_cached_enoent_opens_existing_file():
+    """Review regression: A probes a missing name (negative dentry), B
+    creates it; A's open(O_CREAT) inside the neg TTL gets EEXIST from the
+    server — the fallback lookup must trust that fresh authority, not the
+    cached negative entry (POSIX: the open must succeed)."""
+    from repro.core import O_WRONLY as _W
+    c = _cluster()
+    a = c.mount("v", client_id="a").vfs
+    b = c.mount("v", client_id="b").vfs
+    with timed(c.net, 0.0):
+        assert not a.exists("/f")               # negative entry cached
+    _mk(b, "/f", b"data")
+    with timed(c.net, 100.0):                   # inside the negative TTL
+        fd = a.open("/f", _W | O_CREAT)         # no O_EXCL: must open it
+        a.close(fd)
+    assert b.stat("/f")["size"] == 4            # untouched (no O_TRUNC)
+
+
+# ------------------------------------------------------------- raft fan-out
+def _mkdir_latency_us(fanout: bool, replicas: int) -> float:
+    prev = raft_core.FANOUT_APPENDS
+    raft_core.FANOUT_APPENDS = fanout
+    try:
+        c = _cluster(replicas=replicas, n_meta=6)
+        vfs = c.mount("v").vfs
+        c.net.reset_accounting()
+        with timed(c.net, 0.0) as op:
+            vfs.mkdir("/d")
+        return op.us
+    finally:
+        raft_core.FANOUT_APPENDS = prev
+
+
+@pytest.mark.parametrize("replicas", [3, 5])
+def test_raft_fanout_parallelizes_append_legs(replicas):
+    fan = _mkdir_latency_us(True, replicas)
+    serial = _mkdir_latency_us(False, replicas)
+    assert fan < serial, (fan, serial)
+    # the win grows with the replica count (more legs overlap)
+    if replicas == 5:
+        assert fan < 0.6 * serial
+
+
+# ------------------------------------------- sync_partitions rate limiting
+def test_routing_miss_sync_burst_costs_one_rm_roundtrip():
+    c = _cluster()
+    cl = c.mount("v", client_id="r").vfs.client
+    st = cl.stats
+    rm_calls = st["rm_calls"]
+    with timed(c.net, 0.0):
+        for _ in range(5):                  # inode 0 is covered by nothing
+            with pytest.raises(NotFound):
+                cl._mp_for_inode(0)
+    assert st["rm_calls"] == rm_calls + 1
+    assert st["rm_syncs_suppressed"] == 4
+    with timed(c.net, 10_000.0):            # next window: one more sync
+        with pytest.raises(NotFound):
+            cl._mp_for_inode(0)
+    assert st["rm_calls"] == rm_calls + 2
+
+
+def test_untimed_lookup_success_clears_stale_negative_entry():
+    """Review regression: probe-miss caches ENOENT; after another client
+    creates the name, an UNTIMED lookup that succeeds must clear the
+    negative entry — a later timed op inside the neg TTL must not flip
+    back to ENOENT (read-your-reads)."""
+    c = _cluster()
+    writer = c.mount("v", client_id="w").vfs
+    reader = c.mount("v", client_id="r").vfs
+    with timed(c.net, 0.0):
+        assert not reader.exists("/f")          # negative entry cached
+    _mk(writer, "/f")
+    assert reader.exists("/f")                  # untimed (seed path) success
+    with timed(c.net, 50.0):                    # still inside the neg TTL
+        assert reader.exists("/f"), \
+            "a name this client already observed must not revert to ENOENT"
+
+
+def test_sync_window_handles_non_monotonic_phase_clocks():
+    """Review regression: a sync stamped at a late virtual time must not
+    suppress every sync of a later phase whose clock restarts near 0 —
+    a negative delta is out-of-window, not within it."""
+    c = _cluster()
+    cl = c.mount("v", client_id="r").vfs.client
+    with timed(c.net, 500_000.0):
+        assert cl.sync_partitions() is True     # stamped late
+    rm_calls = cl.stats["rm_calls"]
+    with timed(c.net, 0.0):                     # next phase, clock restarted
+        assert cl.sync_partitions() is True
+    assert cl.stats["rm_calls"] == rm_calls + 1
+
+
+def test_recovery_paths_force_sync_despite_window():
+    c = _cluster()
+    cl = c.mount("v", client_id="r").vfs.client
+    rm_calls = cl.stats["rm_calls"]
+    with timed(c.net, 0.0):
+        assert cl.sync_partitions() is True
+        assert cl.sync_partitions() is False        # suppressed
+        assert cl.sync_partitions(force=True) is True
+    assert cl.stats["rm_calls"] == rm_calls + 2
+
+
+# ------------------------------------------------------------- determinism
+def test_session_ab_suites_same_seed_bit_identical():
+    from benchmarks.mdtest import bench_meta_sessions, bench_raft_fanout
+
+    a = [r.json_obj() for r in bench_meta_sessions(2, 2, smoke=True)]
+    b = [r.json_obj() for r in bench_meta_sessions(2, 2, smoke=True)]
+    assert a == b
+    fa = [r.json_obj() for r in bench_raft_fanout(smoke=True)]
+    fb = [r.json_obj() for r in bench_raft_fanout(smoke=True)]
+    assert fa == fb
+    # and the session A/B's headline claims hold at smoke scale
+    lease = a[0]
+    assert lease["system"] == "cfs"
+    assert lease["meta_rpc_reduction"] >= 0.30
+    assert lease["stale_max_us"] <= lease["ttl_us"]
