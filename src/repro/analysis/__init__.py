@@ -1,0 +1,12 @@
+"""Correctness tooling for the simulator: knob registry, determinism lint,
+and the runtime happens-before sanitizer.
+
+This package must stay importable with zero side effects and zero imports
+from ``repro.core`` — the lint pass imports it while analyzing core, and
+core imports :mod:`repro.analysis.knobs` / :mod:`repro.analysis.sanitizer`
+at module load.
+"""
+
+from . import knobs, sanitizer  # noqa: F401
+
+__all__ = ["knobs", "sanitizer"]

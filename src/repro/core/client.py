@@ -40,12 +40,12 @@ invalidated on seek/write/truncate, drained at the fsync/close barriers.
 from __future__ import annotations
 
 import math
-import os
 import random
 import zlib
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
+from ..analysis import knobs
 from .extent_store import ExtentError
 from .meta_node import (DentryExists, MetaError, NoSuchDentry, NoSuchInode,
                         PartitionFull, RangeExhausted)
@@ -62,25 +62,25 @@ MAX_RETRIES = 4
 # Routing-miss resyncs of the partition table are rate-limited to one RM
 # round-trip per this virtual-time window (µs); 0 disables the limiter
 # (every miss syncs — the seed path).  Recovery paths always force a sync.
-SYNC_WINDOW_US = float(os.environ.get("CFS_SYNC_WINDOW_US", "1000"))
+SYNC_WINDOW_US = knobs.get_float("CFS_SYNC_WINDOW_US")
 
 # Sequential-write pipelining (§2.7): how many ≤128 KB packets a client
 # keeps in flight down the replica chain before it must wait for the oldest
 # ack.  0 disables the window (the seed's one-synchronous-round-trip-per-
 # packet path, kept for A/B benchmarking via CFS_PIPELINE_DEPTH=0).
-PIPELINE_DEPTH = int(os.environ.get("CFS_PIPELINE_DEPTH", "8"))
+PIPELINE_DEPTH = knobs.get_int("CFS_PIPELINE_DEPTH")
 
 # Read-path mirror of the append window: how many ≤128 KB extent fetches a
 # client keeps in flight at once (and how many packets of readahead a
 # sequential scan keeps prefetched).  0 disables the window: one synchronous
 # fetch per extent piece, the seed path kept for A/B benchmarking.
-READ_WINDOW = int(os.environ.get("CFS_READ_WINDOW", "8"))
+READ_WINDOW = knobs.get_int("CFS_READ_WINDOW")
 
 # Slow-replica hedging on the read path: when a fetch's modeled completion
 # blows a p99-derived budget (EWMA per data-partition group, learned from
 # the event timeline), race the next replica and charge only the winner.
 # CFS_HEDGE_READS=0 disables (fetches wait out stragglers, the seed path).
-HEDGE_READS = os.environ.get("CFS_HEDGE_READS", "1") != "0"
+HEDGE_READS = knobs.get_bool("CFS_HEDGE_READS")
 
 # A hedge budget needs samples before it means anything: per-group stats
 # are trusted after this many reads, the client-wide aggregate (the cold-

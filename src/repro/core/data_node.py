@@ -26,6 +26,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
+from ..analysis import sanitizer as _san
 from .extent_store import ExtentError, ExtentStore
 from .multiraft import MultiRaftHost
 from .raft import NotCommitted, NotLeader, StateMachine
@@ -152,6 +153,8 @@ class DataPartitionReplica:
             # the committed prefix stays serveable, the tail is resent elsewhere.
             self.status = PartitionStatus.READ_ONLY
         committed = min(acks.get(nid, 0) for nid in self.replicas)
+        if _san.SAN is not None:
+            _san.SAN.note_commit(self.partition_id, extent_id, committed, op)
         accepted = max(0, committed - offset)
         return WriteResult(extent_id, committed, accepted)
 
@@ -188,7 +191,8 @@ class DataPartitionReplica:
             raise NotLeader(self.replicas[0] if self.replicas else None)
         if self.status != PartitionStatus.READ_WRITE:
             raise ExtentError(f"partition {self.partition_id} is {self.status}")
-        eid, off = self.store.write_small(data, self.node.op())
+        op = self.node.op()
+        eid, off = self.store.write_small(data, op)
         acks = self.acked_sizes.setdefault(eid, {})
         acks[self.node.node_id] = off + len(data)
         chain = self.replicas[1:]
@@ -205,6 +209,8 @@ class DataPartitionReplica:
             except (NetError, ExtentError):
                 self.status = PartitionStatus.READ_ONLY
         committed = min(acks.get(nid, 0) for nid in self.replicas)
+        if _san.SAN is not None:
+            _san.SAN.note_commit(self.partition_id, eid, committed, op)
         return eid, off, max(0, committed - off)
 
     def chain_small_write(self, extent_id: int, offset: int, data: bytes,
@@ -227,18 +233,26 @@ class DataPartitionReplica:
     def leader_overwrite(self, extent_id: int, offset: int, data: bytes) -> int:
         if self.raft is None:
             raise ExtentError("no raft group")
-        return self.raft.propose(("overwrite", extent_id, offset, data))
+        # data-plane raft (overwrite log), no metadata caches to
+        # invalidate  # lint: allow[direct-propose]
+        return self.raft.propose(("overwrite", extent_id, offset, data))  # lint: allow[direct-propose]
 
     # ---- read ------------------------------------------------------------------
     def read(self, extent_id: int, offset: int, size: int,
              verify_crc: bool = False) -> bytes:
         """Serve a read bounded by the committed offset (stale tails on
         followers are never returned, §2.2.5)."""
+        op = self.node.op()
+        if _san.SAN is not None:
+            # group-wide committed-prefix check: extends the leader-only
+            # guard below to followers, whose local acked_sizes are empty
+            _san.SAN.check_read(self.partition_id, extent_id,
+                                offset, offset + size, op)
         committed = self.committed_size(extent_id)
         if offset + size > committed and self.is_pb_leader:
             raise ExtentError(
                 f"read beyond committed offset {committed} (req {offset}+{size})")
-        return self.store.read(extent_id, offset, size, self.node.op(),
+        return self.store.read(extent_id, offset, size, op,
                                verify_crc=verify_crc)
 
     # ---- recovery (§2.2.5) -------------------------------------------------------

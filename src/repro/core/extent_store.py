@@ -24,6 +24,7 @@ import zlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+from ..analysis import sanitizer as _san
 from .simnet import Disk, OpTimer
 from .types import SMALL_FILE_THRESHOLD
 
@@ -84,6 +85,8 @@ class ExtentStore:
         ext = self.extents.pop(extent_id, None)
         if ext is None:
             return
+        if _san.SAN is not None:
+            _san.SAN.drop_extent(self, extent_id)
         self.disk.release(ext.live_bytes())
         if op is not None:
             self.disk.write_cost(0, op)  # metadata update
@@ -103,6 +106,11 @@ class ExtentStore:
         """Write ``data`` at ``offset`` which must be the current size
         (append-only discipline for the PB path); returns new size."""
         ext = self.get(extent_id)
+        if _san.SAN is not None and op is not None:
+            # before offset validation: a racy fork branch is reported as
+            # the race it is, not as the ExtentError symptom it causes
+            _san.SAN.note_append(self, extent_id,
+                                 offset, offset + len(data), op)
         if offset != ext.size:
             raise ExtentError(
                 f"non-append write at {offset}, size={ext.size} (extent {extent_id})")
@@ -126,6 +134,10 @@ class ExtentStore:
         ext.holes = [(o, l) for (o, l) in ext.holes if o + l <= size]
         self.disk.release(freed)
         ext.crc = zlib.crc32(bytes(ext.data))
+        if _san.SAN is not None:
+            # the discarded tail's write records go with it, so recovery's
+            # re-replication of those bytes is not a phantom conflict
+            _san.SAN.note_truncate(self, extent_id, size)
 
     # ---- overwrite (random write, raft path) ---------------------------------
     def overwrite(self, extent_id: int, offset: int, data: bytes,
@@ -150,6 +162,9 @@ class ExtentStore:
         eid = self._tiny_extent_id
         ext = self.get(eid)
         offset = ext.size
+        if _san.SAN is not None and op is not None:
+            _san.SAN.note_append(self, eid,
+                                 offset, offset + len(data), op)
         self.disk.alloc(len(data))
         ext.data.extend(data)
         ext.size += len(data)
@@ -215,6 +230,10 @@ class ExtentStore:
         }
 
     def restore(self, snap: Dict) -> None:
+        if _san.SAN is not None:
+            # wholesale replacement (raft snapshot): old write records are
+            # for state that no longer exists on this replica
+            _san.SAN.drop_store(self)
         self.disk.release(sum(e.live_bytes() for e in self.extents.values()))
         self._next_id = snap["next_id"]
         self._tiny_extent_id = snap["tiny"]

@@ -33,11 +33,10 @@ of a per-open round-trip.
 
 from __future__ import annotations
 
-import os
-import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
+from ..analysis import knobs
 from .btree import BTree
 from .multiraft import MultiRaftHost
 from .raft import StateMachine
@@ -52,10 +51,11 @@ INODE_MEM_BYTES = 300
 DENTRY_MEM_BYTES = 120
 
 # Lease TTL granted on read replies (virtual µs).  The client caps its own
-# cache validity at min(client TTL, server grant); both default to the same
-# knob so one env var tunes the whole contract.  0 = grant nothing (clients
-# fall back to the seed's sync-on-open path).
-META_LEASE_US = float(os.environ.get("CFS_META_TTL", "1000000"))
+# cache validity at min(client TTL, server grant); both sides read the SAME
+# registry entry so one env var — with one default — tunes the whole
+# contract (previously each module parsed its own copy, and a skewed
+# override desynchronized server grants from client cache TTLs).
+META_LEASE_US = knobs.get_float("CFS_META_TTL")
 
 
 class MetaError(Exception):
@@ -434,7 +434,8 @@ class MetaNode:
         """Write op: goes through the partition's raft group.  Charges the
         (batched) raft log append on every replica (§2.1.3 snapshots+logs)."""
         member = self.raft_members[partition_id]
-        result = member.propose(payload, client_id=client_id, seq=seq)
+        # server-side executor the client funnel RPCs into
+        result = member.propose(payload, client_id=client_id, seq=seq)  # lint: allow[direct-propose]
         op = self.net.current_op
         for nid in member.peers:
             self.net.charge_busy(nid, self.LOG_APPEND_US)

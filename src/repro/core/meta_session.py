@@ -36,17 +36,20 @@ interior path components, authoritative RPC for the leaf, force-sync
 
 from __future__ import annotations
 
-import os
 from typing import Any, Dict, List, Optional, Tuple
 
+from ..analysis import knobs
+from ..analysis import sanitizer as _san
 from .meta_node import NoSuchDentry, NoSuchInode
 
 __all__ = ["MetaSession", "META_TTL_US", "META_NEG_TTL_US"]
 
 # Client-side lease TTLs (virtual µs).  CFS_META_TTL=0 disables sessions
-# entirely (the seed sync-on-open path, kept for A/B benchmarking).
-META_TTL_US = float(os.environ.get("CFS_META_TTL", "1000000"))
-META_NEG_TTL_US = float(os.environ.get("CFS_META_NEG_TTL", "100000"))
+# entirely (the seed sync-on-open path, kept for A/B benchmarking).  Read
+# from the knob registry — the server's grant (meta_node.META_LEASE_US)
+# comes from the same entry, so the two sides cannot skew.
+META_TTL_US = knobs.get_float("CFS_META_TTL")
+META_NEG_TTL_US = knobs.get_float("CFS_META_NEG_TTL")
 
 
 def _not_found(msg: str) -> Exception:
@@ -101,6 +104,12 @@ class MetaSession:
         age = max(0.0, now - granted)
         if age > st["meta_stale_max_us"]:
             st["meta_stale_max_us"] = age
+        if _san.SAN is not None:
+            # every lease-served hit funnels through here: assert the paper's
+            # one-TTL staleness contract instead of trusting the expiry math
+            _san.SAN.check_lease_age(
+                age, self.neg_ttl_us if neg else self.ttl_us,
+                "negative dentry" if neg else "lease entry")
 
     # ------------------------------------------------------------------ reads
     def lookup(self, parent: int, name: str,

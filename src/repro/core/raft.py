@@ -18,11 +18,12 @@ operations stay exactly-once even though the paper's clients retry on failure
 
 from __future__ import annotations
 
-import os
 import random
+import zlib
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from ..analysis import knobs
 from .simnet import NetError, Network
 
 # Leader→follower AppendEntries legs of one propose are independent RPCs; a
@@ -31,7 +32,7 @@ from .simnet import NetError, Network
 # serializes transmissions) instead of serializing the whole round-trips —
 # meta p50 drops as the replica count grows.  CFS_RAFT_FANOUT=0 keeps the
 # seed's serial legs for A/B benchmarking.
-FANOUT_APPENDS = os.environ.get("CFS_RAFT_FANOUT", "1") != "0"
+FANOUT_APPENDS = knobs.get_bool("CFS_RAFT_FANOUT")
 
 __all__ = [
     "Role",
@@ -164,7 +165,10 @@ class RaftMember:
         self.sm = sm
         self.send = send
         self.net = net
-        self.rng = rng or random.Random(hash((group_id, node_id)) & 0xFFFF)
+        # crc32, NOT builtin hash(): str hashing is salted per process and
+        # would give every run a different election-timeout sequence
+        self.rng = rng or random.Random(
+            zlib.crc32(f"{group_id}/{node_id}".encode()) & 0xFFFF)
 
         self.term = 0
         self.voted_for: Optional[str] = None

