@@ -4,7 +4,7 @@ Seven operations (Table 2), run on CFS and the Ceph-like baseline across a
 single-client process sweep (Fig. 6) and a multi-client sweep at 64
 procs/client (Fig. 7 / Table 3).
 
-Two A/B sub-suites ride along:
+Three A/B sub-suites ride along:
 
 * **StatOpen** — the stat/open-heavy phase under the metadata-session
   lease contract (system ``cfs``) vs the seed's sync-on-open path
@@ -15,6 +15,10 @@ Two A/B sub-suites ride along:
 * **MkdirR3/MkdirR5** — metadata mutations with the raft append legs
   fanned out concurrently (``cfs``) vs serialized per peer
   (``cfs-nofan``), at 3 and 5 meta replicas.
+* **CreateAsync** — create-heavy mutations with early-ack async commits
+  (``cfs-async``, leader journal + background raft round) vs the seed's
+  synchronous ack path (``cfs-sync``), 1×4 through 8×64; the async rows
+  carry window/barrier counters and the journal drain p50/p99.
 """
 
 from __future__ import annotations
@@ -26,7 +30,7 @@ from repro.core import (CfsCluster, CfsVfs, O_CREAT, O_RDONLY, O_TRUNC,
                         O_WRONLY)
 from repro.baseline.cephlike import CephLikeCluster, CephLikeMount
 
-from .common import BenchResult, run_streams
+from .common import BenchResult, percentile, run_streams
 
 ITEMS = 12               # items per proc per test (sim-time, not wall time)
 TREE_DEPTH = 4           # TreeCreation/Removal: branching-2 tree of dirs
@@ -262,6 +266,65 @@ def bench_meta_sessions(clients: int, procs: int, smoke: bool
     return rows
 
 
+# ---- A/B: async metadata commits (early-ack journal) ----------------------
+ASYNC_KEYS = ("meta_async_acks", "meta_async_stalls", "meta_barriers",
+              "meta_barrier_stalls", "meta_barrier_stall_us")
+
+
+def _journal_drain_us(cluster) -> List[float]:
+    """Background-commit drain latencies (commit − ack) of every journaled
+    async mutation across the cluster's meta nodes."""
+    return sorted(rec["commit_us"] - rec["ack_us"]
+                  for node in cluster.meta_nodes.values()
+                  for recs in node.journal.values() for rec in recs)
+
+
+def bench_create_async(smoke: bool) -> List[BenchResult]:
+    """Create-heavy A/B (the tentpole row): namespace creates with async
+    early-ack commits (``cfs-async``, the default) vs the seed's
+    synchronous raft-round-per-mutation ack path (``cfs-sync``), on
+    identical clusters and stream layouts from 1×4 through 8×64.  The
+    async rows carry the unacked-window and barrier counters plus the
+    journal drain p50/p99; ``p50_vs_sync`` is the headline ratio (the
+    acceptance bar: ≤ 0.5 at 1×4)."""
+    rows: List[BenchResult] = []
+    shapes = [(1, 2)] if smoke else [(1, 4), (4, 64), (8, 64)]
+    for clients, procs in shapes:
+        pair: dict = {}
+        for label, on in (("cfs-async", True), ("cfs-sync", False)):
+            c = make_cfs(4 if smoke else 10)
+            mounts = _mounts("cfs", c, clients)
+            for m in mounts:
+                m.client.meta_async = on
+            base = f"/ca_{clients}x{procs}"
+            mounts[0].mkdir(base)
+
+            def mk(mnt, ci, pi):
+                return (lambda i=i, ci=ci, pi=pi, mnt=mnt:
+                        mnt.mkdir(f"{base}/d{ci}_{pi}_{i}")
+                        for i in range(ITEMS))
+            r = run_streams("CreateAsync", label, c.net,
+                            _streams_for(mounts, procs, mk), clients, procs)
+            if on:
+                st = {k: sum(m.client.stats[k] for m in mounts)
+                      for k in ASYNC_KEYS}
+                drain = _journal_drain_us(c)
+                r.extra = {
+                    "async_acks": st["meta_async_acks"],
+                    "window_stalls": st["meta_async_stalls"],
+                    "barriers": st["meta_barriers"],
+                    "barrier_stalls": st["meta_barrier_stalls"],
+                    "barrier_stall_us": st["meta_barrier_stall_us"],
+                    "journal_drain_p50_us": percentile(drain, 0.50),
+                    "journal_drain_p99_us": percentile(drain, 0.99),
+                }
+            pair[label] = r
+            rows.append(r)
+        pair["cfs-async"].extra["p50_vs_sync"] = (
+            pair["cfs-async"].p50_us / max(pair["cfs-sync"].p50_us, 1e-9))
+    return rows
+
+
 # ---- A/B 2: raft fan-out (parallel AppendEntries legs) ---------------------
 def bench_raft_fanout(smoke: bool) -> List[BenchResult]:
     """Meta-mutation p50 with the leader→follower append legs forked as
@@ -311,5 +374,6 @@ def run(out_rows: List[str], smoke: bool = False) -> List[dict]:
     ab_clients, ab_procs = (2, 4) if smoke else (8, 64)
     results.extend(bench_meta_sessions(ab_clients, ab_procs, smoke))
     results.extend(bench_raft_fanout(smoke))
+    results.extend(bench_create_async(smoke))
     out_rows.extend(r.row() for r in results)
     return [r.json_obj() for r in results]

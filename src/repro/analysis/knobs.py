@@ -78,6 +78,14 @@ _DECLS = [
          "Enable the happens-before / staleness runtime sanitizer",
          "sanitizer off (zero overhead)",
          "repro.analysis.sanitizer", 6),
+    Knob("CFS_META_ASYNC", "1", "bool",
+         "Early-ack async metadata commits (leader journal, background raft)",
+         "seed synchronous raft-round-per-mutation ack path",
+         "repro.core.client", 7),
+    Knob("CFS_META_JOURNAL_DEPTH", "64", "int",
+         "Max unacked async metadata mutations in flight per partition",
+         "synchronous commits (no unacked window)",
+         "repro.core.client", 7),
 ]
 
 KNOBS: Dict[str, Knob] = {k.name: k for k in _DECLS}

@@ -55,8 +55,8 @@ __all__ = ["Finding", "Checker", "CHECKERS", "lint_file", "lint_paths", "main"]
 SIM_SCOPE = ("repro.core", "repro.baseline")
 
 # Blocking client helpers that drain/synchronize the current op's frontier.
-BLOCKING_HELPERS = {"drain_window", "sync_partitions", "evict_orphans",
-                    "fsync"}
+BLOCKING_HELPERS = {"drain_window", "drain_meta_window", "sync_partitions",
+                    "evict_orphans", "fsync"}
 
 WALL_CLOCK_CALLS = {
     ("time", "time"), ("time", "time_ns"), ("time", "monotonic"),

@@ -21,6 +21,13 @@ always-on assertions (λFS-style mechanical invariant checking):
 * **Lease staleness bound** — every lease-served metadata cache hit checks
   ``age <= TTL`` at the single serving funnel (``MetaSession._served``),
   turning the paper's one-TTL staleness contract into an assertion.
+* **Async-commit ordering** — meta partitions record every mvcc assignment
+  (``MetaPartitionSM.apply`` / snapshot restore); a timed read must never
+  observe an mvcc the journal has not yet assigned
+  (:meth:`Sanitizer.check_mvcc_read`), and a durability barrier drain must
+  happens-before-precede its fsync ack: every async-acked background
+  commit on the drained partition must have completed by the time the
+  barrier returns (:meth:`Sanitizer.check_async_barrier`).
 
 Design constraints: the sanitizer only *observes* — it never advances
 clocks, touches RNGs, or perturbs resource queues, so enabling it cannot
@@ -104,6 +111,14 @@ class Sanitizer:
         # ``hi`` bytes were committed" in O(log n)
         self._commit_off: Dict[Tuple[int, int], List[int]] = {}
         self._commit_t: Dict[Tuple[int, int], List[float]] = {}
+        # meta partition_id -> highest mvcc the journal has assigned
+        self._mvcc_hw: Dict[int, int] = {}
+        # (client_id, partition_id) -> ((net_serial, epoch), commit_us) of
+        # async-acked mutations still un-drained (a multiset: values
+        # repeat); the timeline token tells live entries from records a
+        # previous cluster/phase parked on a dead virtual clock
+        self._async_acks: Dict[Tuple[str, int],
+                               List[Tuple[Tuple[int, int], float]]] = {}
         self.violations = 0      # raises are counted too (tests may catch)
 
     # ---------------------------------------------------------- op context
@@ -153,6 +168,9 @@ class Sanitizer:
             if offs:
                 self._commit_off[key] = [offs[-1]]
                 self._commit_t[key] = [_ANCIENT]
+        # async windows parked across a reset belong to a dead clock; the
+        # mvcc high-waters are counters, not times — they survive
+        self._async_acks.clear()
 
     # ------------------------------------------------------------- writes
     def note_append(self, store, extent_id: int, lo: int, hi: int,
@@ -257,6 +275,60 @@ class Sanitizer:
                 f"{extent_id} in partition {partition_id} at virtual time "
                 f"{op.now_us:.3f} but offset {hi} was only committed at "
                 f"{t_committed:.3f}")
+
+    # ------------------------------------------------------- async commits
+    def note_mvcc_assign(self, partition_id: int, mvcc: int) -> None:
+        """The journal's mvcc-assignment point (every applied mutation and
+        every snapshot restore): advance the partition's high-water."""
+        if mvcc > self._mvcc_hw.get(partition_id, -1):
+            self._mvcc_hw[partition_id] = mvcc
+
+    def check_mvcc_read(self, partition_id: int, mvcc: int, op) -> None:
+        """No timed read may observe a partition mvcc the journal has not
+        yet assigned.  Partitions with no recorded assignment (built
+        outside the apply path by test fixtures) are not checked."""
+        if op is None or getattr(op, "_san_serial", None) is None:
+            return
+        hw = self._mvcc_hw.get(partition_id)
+        if hw is None:
+            return
+        if mvcc > hw:
+            self.violations += 1
+            raise HBViolation(
+                f"async-commit mvcc violation: read observed mvcc {mvcc} "
+                f"on meta partition {partition_id} but the journal has "
+                f"only assigned up to {hw}")
+
+    def note_async_ack(self, key: Tuple[str, int], commit_us: float,
+                       op, timeline: Tuple[int, int]) -> None:
+        """An async-acked mutation's background commit is now outstanding
+        for (client, partition) until a barrier drains it.  ``timeline``
+        is the client's (net_serial, timeline_epoch): commit times only
+        mean anything on the virtual clock that produced them."""
+        if op is None or getattr(op, "_san_serial", None) is None:
+            return
+        self._async_acks.setdefault(key, []).append((timeline, commit_us))
+
+    def check_async_barrier(self, key: Tuple[str, int], op,
+                            timeline: Tuple[int, int]) -> None:
+        """Barrier drain must HB-precede the fsync ack: when a barrier over
+        (client, partition) returns, every outstanding background commit
+        on the SAME virtual timeline must have completed at-or-before the
+        caller's virtual time (records from a dead clock are discarded)."""
+        lst = self._async_acks.pop(key, None)
+        if not lst or op is None or \
+                getattr(op, "_san_serial", None) is None:
+            return
+        live = [c for (tl, c) in lst if tl == timeline]
+        if not live:
+            return
+        hw = max(live)
+        if op.now_us + _EPS < hw:
+            self.violations += 1
+            raise HBViolation(
+                f"async-commit barrier violated: drain returned at "
+                f"{op.now_us:.3f}us with a background commit acked at "
+                f"{hw:.3f}us still in flight on partition {key[1]}")
 
     # -------------------------------------------------------------- leases
     def check_lease_age(self, age_us: float, bound_us: float,

@@ -46,11 +46,12 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 from ..analysis import knobs
+from ..analysis import sanitizer as _san
 from .extent_store import ExtentError
 from .meta_node import (DentryExists, MetaError, NoSuchDentry, NoSuchInode,
                         PartitionFull, RangeExhausted)
 from .raft import NotCommitted, NotLeader
-from .simnet import NetError, Network
+from .simnet import NetError, Network, OpTimer
 from .types import (MAX_UINT64, PACKET_SIZE, ROOT_INODE,
                     SMALL_FILE_THRESHOLD, ExtentKey, InodeType)
 
@@ -81,6 +82,18 @@ READ_WINDOW = knobs.get_int("CFS_READ_WINDOW")
 # the event timeline), race the next replica and charge only the winner.
 # CFS_HEDGE_READS=0 disables (fetches wait out stragglers, the seed path).
 HEDGE_READS = knobs.get_bool("CFS_HEDGE_READS")
+
+# Async metadata commits (the metadata mirror of the append pipeline): the
+# partition leader journals the mutation, stamps the next mvcc and acks the
+# client after one NIC round + a journal append; the raft round completes in
+# the background under a bounded per-partition unacked window.  0 restores
+# the seed's synchronous raft-round-per-mutation ack path.
+META_ASYNC = knobs.get_bool("CFS_META_ASYNC")
+
+# How many async-acked metadata mutations a client may hold un-durable per
+# partition before the next mutation stalls on the oldest background commit
+# (mirrors CFS_PIPELINE_DEPTH on the data side).  0 = synchronous commits.
+META_JOURNAL_DEPTH = knobs.get_int("CFS_META_JOURNAL_DEPTH")
 
 # A hedge budget needs samples before it means anything: per-group stats
 # are trusted after this many reads, the client-wide aggregate (the cold-
@@ -183,6 +196,20 @@ class CfsClient:
         # ---- read path knobs (window + hedging) ----
         self.read_window = READ_WINDOW
         self.hedge_reads = HEDGE_READS
+        # ---- async metadata commits (CFS_META_ASYNC) ----
+        self.meta_async = META_ASYNC
+        self.meta_journal_depth = META_JOURNAL_DEPTH
+        # per-partition unacked window: (timeline_epoch, ack_us, commit_us)
+        # of each in-flight async mutation.  A full window stalls on the
+        # oldest EARLY ack (leader FIFO ⇒ acks arrive in send order); the
+        # background commit stays pending in _meta_commit_hw until the next
+        # durability barrier.  Epoch stamps drop entries parked across a
+        # benchmark-phase timeline reset
+        self._meta_unacked: Dict[int, List[Tuple[int, float, float]]] = {}
+        # per-partition high-water of background commit times this epoch:
+        # commits are FIFO through the leader's journal, so the latest one
+        # covers the whole acked prefix — drain_meta_window waits on it
+        self._meta_commit_hw: Dict[int, Tuple[int, float]] = {}
         # ---- caches (§2.4) ----
         self.meta_partitions: List[_MetaPartition] = []
         self.data_partitions: List[_DataPartition] = []
@@ -211,7 +238,11 @@ class CfsClient:
                       "meta_cache_hits": 0, "meta_cache_misses": 0,
                       "neg_hits": 0, "lease_revalidations": 0,
                       "meta_stale_max_us": 0.0,
-                      "rm_syncs_suppressed": 0}
+                      "rm_syncs_suppressed": 0,
+                      # ---- async metadata commit counters ----
+                      "meta_async_acks": 0, "meta_async_stalls": 0,
+                      "meta_barriers": 0, "meta_barrier_stalls": 0,
+                      "meta_barrier_stall_us": 0.0}
         # lease/version session over the inode/dentry caches (TTL knobs
         # CFS_META_TTL / CFS_META_NEG_TTL; ttl 0 = seed sync-on-open)
         from .meta_session import MetaSession
@@ -278,20 +309,77 @@ class CfsClient:
     def _meta_propose(self, mp: _MetaPartition, payload: Any,
                       seq: Optional[int] = None) -> Any:
         """Mutating op through the partition's raft leader, with leader cache
-        + retry.  Session (client_id, seq) deduplicates retries."""
+        + retry.  Session (client_id, seq) deduplicates retries.
+
+        Under ``meta_async`` (timed ops only) the mutation goes through the
+        leader's ``propose_async`` journal path and is pipelined exactly
+        like the data path's append window: the RPC runs as a timed sub-op,
+        the client continues the moment the request leaves its NIC
+        (``tx_done_us``), and the ack/commit times are parked in the
+        partition's bounded unacked window.  A full window stalls on the
+        oldest in-flight EARLY ack; durability barriers
+        (:meth:`drain_meta_window`) wait on the background-commit
+        high-water instead."""
         seq = self._next_seq() if seq is None else seq
         gid = f"mp{mp.pid}"
         order = self._replica_order(gid, mp.replicas)
         last_err: Exception = NotFound(gid)
+        op = self.net.current_op
+        window: Optional[List[Tuple[int, float]]] = None
+        if (self.meta_async and self.meta_journal_depth > 0
+                and op is not None and op.timed):
+            window = self._meta_unacked.setdefault(mp.pid, [])
+            # entries parked across a timeline reset belong to a dead clock
+            window[:] = [e for e in window
+                         if e[0] == self.net.timeline_epoch]
+            if len(window) >= self.meta_journal_depth:
+                # window full: wait for the oldest in-flight early ack
+                # (leader FIFO ⇒ acks arrive in send order); its background
+                # commit stays pending until the next durability barrier
+                _ep, ack, _commit = window.pop(0)
+                self.stats["meta_async_stalls"] += 1
+                op.advance_to(ack)
         for attempt in range(MAX_RETRIES):
             for nid in order:
+                sub: Optional[OpTimer] = None
                 try:
-                    res = self.net.call(
-                        self.client_id, nid, self.meta_nodes[nid].propose,
-                        mp.pid, payload, self.client_id, seq,
-                        kind="client.meta")
+                    if window is not None:
+                        # timed sub-op: the round's NIC/CPU occupancy is
+                        # real, but the client op only pays the request
+                        # transmit — the ack and the raft round complete in
+                        # the background (mirrors the append pipeline)
+                        sub = self.net.begin_op(at=op.now_us)
+                        try:
+                            env = self.net.call(
+                                self.client_id, nid,
+                                self.meta_nodes[nid].propose_async,
+                                mp.pid, payload, self.client_id, seq,
+                                kind="client.meta")
+                        finally:
+                            self.net.end_op()
+                        res = env["v"]
+                    else:
+                        res = self.net.call(
+                            self.client_id, nid, self.meta_nodes[nid].propose,
+                            mp.pid, payload, self.client_id, seq,
+                            kind="client.meta")
                     self.stats["meta_calls"] += 1
                     self.leader_cache[gid] = nid
+                    if window is not None:
+                        self.stats["meta_async_acks"] += 1
+                        op.advance_to(sub.tx_done_us)
+                        ep = self.net.timeline_epoch
+                        window.append((ep, sub.now_us, env["commit_us"]))
+                        hw = self._meta_commit_hw.get(mp.pid)
+                        if (hw is None or hw[0] != ep
+                                or env["commit_us"] > hw[1]):
+                            self._meta_commit_hw[mp.pid] = \
+                                (ep, env["commit_us"])
+                        if _san.SAN is not None:
+                            _san.SAN.check_mvcc_read(mp.pid, env["mvcc"], op)
+                            _san.SAN.note_async_ack(
+                                (self.client_id, mp.pid), env["commit_us"],
+                                op, (self.net.net_serial, ep))
                     # session write-through: refresh/drop the cached entries
                     # this mutation touched (read-your-writes, zero staleness
                     # for the mutating client)
@@ -299,11 +387,17 @@ class CfsClient:
                     return res
                 except NotLeader as e:
                     last_err = e
+                    if sub is not None:
+                        # a NAK is still a round trip: the client only
+                        # learns it must re-route when the error lands
+                        op.advance_to(sub.now_us)
                     if e.leader_hint and e.leader_hint in mp.replicas:
                         order = [e.leader_hint]
                     continue
                 except (NetError, NotCommitted) as e:
                     last_err = e
+                    if sub is not None:
+                        op.advance_to(sub.now_us)
                     self.stats["retries"] += 1
                     continue
             order = list(mp.replicas)
@@ -462,10 +556,17 @@ class CfsClient:
             groups[mp.pid][1].append(i)
             groups[mp.pid][2].append(payload)
         results: List[Any] = [None] * len(ops)
+        prev_pid: Optional[int] = None
         for pid in order:
+            if prev_pid is not None:
+                # dependent cross-partition sub-ops serialize on the
+                # journal: the earlier partition's async window drains
+                # before the later partition's mutation is proposed
+                self.drain_meta_window(prev_pid)
             mp, idxs, subs = groups[pid]
             for i, res in zip(idxs, self._batch_propose(mp, subs)):
                 results[i] = res
+            prev_pid = pid
         return results
 
     # ============================================================ metadata ops
@@ -536,6 +637,10 @@ class CfsClient:
                     return res[0]
         inode = self.create_inode(itype, link_target)
         ino = inode["inode"]
+        # one-directional invariant (§2.6): a dentry may only reference an
+        # inode that is durable first — drain the inode partition's async
+        # window before the dentry lands on another partition
+        self.drain_meta_window(self._mp_for_inode(ino).pid)
         try:
             self._create_dentry(parent, name, ino, itype)
         except Exception:
@@ -567,6 +672,8 @@ class CfsClient:
         """Fig. 3 'link': nlink += 1 first, then the dentry; rollback on fail."""
         mp_i = self._mp_for_inode(ino)
         inode = self._meta_propose(mp_i, ("link_inc", ino))
+        # the new dentry depends on the nlink bump being durable first
+        self.drain_meta_window(mp_i.pid)
         try:
             return self._create_dentry(parent, name, ino, inode["type"])
         except Exception:
@@ -582,6 +689,8 @@ class CfsClient:
         except NoSuchDentry:
             raise NotFound(f"{parent}/{name}")
         ino = dentry["inode"]
+        # the nlink decrement must not outrun the dentry delete's durability
+        self.drain_meta_window(mp_p.pid)
         try:
             mp_i = self._mp_for_inode(ino)
             inode = self._meta_propose(mp_i, ("unlink_dec", ino))
@@ -638,7 +747,9 @@ class CfsClient:
         if colocated:
             evict_res = res[2]
         else:
-            # inode lives elsewhere: one more (batched) round-trip there
+            # inode lives elsewhere: one more (batched) round-trip there —
+            # serialized behind the dentry delete's background commit
+            self.drain_meta_window(mp_p.pid)
             try:
                 dec, evict_res = self._batch_propose(
                     mp_i, [("unlink_dec", ino), ("evict", ino)])
@@ -686,6 +797,9 @@ class CfsClient:
         else:
             mp_i = self._mp_for_inode(ino)
             self._meta_propose(mp_i, ("link_inc", ino))
+            # each step of the bracket depends on the previous partition's
+            # mutation being durable: serialize on the async windows
+            self.drain_meta_window(mp_i.pid)
             try:
                 self._create_dentry(dst_parent, dst_name, ino, itype)
                 if itype == InodeType.DIR and cross_dir:
@@ -693,6 +807,7 @@ class CfsClient:
             except Exception:
                 self._meta_propose(mp_i, ("unlink_dec", ino))
                 raise
+            self.drain_meta_window(mp_dst.pid)
             try:
                 self._meta_propose(
                     mp_src, ("delete_dentry", src_parent, src_name))
@@ -700,6 +815,7 @@ class CfsClient:
                 raise NotFound(f"{src_parent}/{src_name}")
             if itype == InodeType.DIR and cross_dir:
                 self._meta_propose(mp_src, ("unlink_dec", src_parent))
+            self.drain_meta_window(mp_src.pid)
             self._meta_propose(mp_i, ("unlink_dec", ino))
         # the propose hook dropped the src dentry (negative entry) and noted
         # the dst dentry into the session as the batch/scatter ops landed
@@ -797,6 +913,36 @@ class CfsClient:
             if op is not None and op.timed:
                 op.advance_to(max(window))
             window.clear()
+
+    def drain_meta_window(self, pid: Optional[int] = None) -> None:
+        """Durability barrier over the async metadata unacked windows: the
+        caller's virtual time advances to the latest background commit
+        still in flight for ``pid`` (or for EVERY partition when None).
+        This is the client-visible commit point — dir-fsync drains its
+        partition, close of a created file drains everything — and the
+        serialization point dependent cross-partition ops wait on.  A
+        no-op when async commits are off or nothing is in flight."""
+        pids = [pid] if pid is not None else \
+            sorted(set(self._meta_unacked) | set(self._meta_commit_hw))
+        op = self.net.current_op
+        for p in pids:
+            window = self._meta_unacked.get(p)
+            if window:
+                window.clear()
+            hw = self._meta_commit_hw.pop(p, None)
+            if hw is None or hw[0] != self.net.timeline_epoch:
+                continue
+            self.stats["meta_barriers"] += 1
+            t = hw[1]
+            if op is not None and op.timed:
+                if t > op.now_us:
+                    self.stats["meta_barrier_stalls"] += 1
+                    self.stats["meta_barrier_stall_us"] += t - op.now_us
+                op.advance_to(t)
+            if _san.SAN is not None:
+                _san.SAN.check_async_barrier(
+                    (self.client_id, p), op,
+                    (self.net.net_serial, self.net.timeline_epoch))
 
     def _append_packets(self, data: bytes,
                         state: Optional[Tuple[int, int, int]] = None,
@@ -1499,6 +1645,10 @@ class CfsFile:
             self.inode = self.client.update_extents(
                 self.inode["inode"], self._size, self._extents)
             self._dirty = False
+        # metadata durability barrier (close of a created file is an fsync):
+        # every async-acked namespace mutation must be committed before the
+        # fsync ack returns to the caller
+        self.client.drain_meta_window()
 
     def close(self) -> None:
         self.fsync()

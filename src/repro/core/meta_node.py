@@ -37,9 +37,10 @@ from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
 from ..analysis import knobs
+from ..analysis import sanitizer as _san
 from .btree import BTree
 from .multiraft import MultiRaftHost
-from .raft import StateMachine
+from .raft import NotLeader, StateMachine
 from .simnet import Network
 from .types import MAX_UINT64, Dentry, Inode, InodeFlag, InodeType
 
@@ -130,6 +131,10 @@ class MetaPartitionSM(StateMachine):
             # version of this very mutation; deterministic across replicas
             # (followers apply the same committed entries in order)
             self.mvcc += 1
+            if _san.SAN is not None:
+                # the journal's mvcc-assignment point: no timed read may
+                # observe a partition mvcc before this runs for it
+                _san.SAN.note_mvcc_assign(self.partition_id, self.mvcc)
         return getattr(self, "_ap_" + op)(*args)
 
     # -- inode ops
@@ -359,6 +364,8 @@ class MetaPartitionSM(StateMachine):
         self.end = snap["end"]
         self.cursor = snap["cursor"]
         self.mvcc = snap["mvcc"]
+        if _san.SAN is not None:
+            _san.SAN.note_mvcc_assign(self.partition_id, self.mvcc)
         self.free_list = list(snap["free"])
         self.inode_tree = BTree()
         self.dentry_tree = BTree()
@@ -413,6 +420,10 @@ class MetaNode:
         self.raft_members: Dict[int, Any] = {}
         self.raft_host = MultiRaftHost(node_id, net, raft_registry)
         self.zone = zone
+        # per-partition write-ahead journal records of async-acked
+        # mutations: {"mvcc", "ack_us", "commit_us"} — drain latency is
+        # commit_us - ack_us (reported by benchmarks/report.py)
+        self.journal: Dict[int, List[Dict[str, float]]] = {}
         registry[node_id] = self
 
     # ---- partition lifecycle ---------------------------------------------------
@@ -428,6 +439,9 @@ class MetaNode:
     # ---- RPC endpoints -----------------------------------------------------------
     # sequential raft-log append (group-committed) per metadata mutation
     LOG_APPEND_US = 4.0
+    # leader-local journal append on the async-commit ack path (a single
+    # buffered sequential write, no replication round)
+    JOURNAL_APPEND_US = 2.0
 
     def propose(self, partition_id: int, payload: Any,
                 client_id: str = "", seq: int = -1) -> Any:
@@ -442,6 +456,48 @@ class MetaNode:
         if op is not None:
             op.add(self.LOG_APPEND_US)
         return result
+
+    def propose_async(self, partition_id: int, payload: Any,
+                      client_id: str = "", seq: int = -1) -> Dict[str, Any]:
+        """Async-commit write (CFS_META_ASYNC): the leader appends the
+        mutation to its partition journal, stamps it with the next mvcc and
+        acks the client after one NIC round plus a journal append — the
+        raft replication round completes in the background on a detached
+        timeline.  Returns an envelope ``{"v", "mvcc", "commit_us"}``; the
+        client holds ``commit_us`` in its bounded unacked window and drains
+        it at durability barriers (dir-fsync, close-of-created-file).
+
+        Modeling idealization: the leader validates and applies the
+        mutation to its in-memory tree at ack time, so semantic failures
+        (DentryExists, NoSuchInode, ...) still surface synchronously on the
+        ack path; only durability (replication to followers) rides the
+        background clock.  A dedup-hit replay is already durable, so its
+        ``commit_us`` collapses to the ack time."""
+        member = self.raft_members[partition_id]
+        if member.role != "leader":
+            raise NotLeader(member.leader_id)
+        sm = self.partitions[partition_id]
+        op = self.net.current_op
+        if op is None or not op.timed:
+            # untimed callers (setup, recovery scans) take the sync path —
+            # there is no client clock to early-ack against
+            return {"v": self.propose(partition_id, payload, client_id, seq),  # lint: allow[direct-propose]
+                    "mvcc": sm.mvcc, "commit_us": 0.0}
+        self.net.charge_busy(self.node_id, self.JOURNAL_APPEND_US)
+        op.add(self.JOURNAL_APPEND_US)
+        ack_us = op.now_us
+        sub = self.net.begin_op(at=ack_us)
+        try:
+            result = member.propose(payload, client_id=client_id, seq=seq)  # lint: allow[direct-propose]
+            for nid in member.peers:
+                self.net.charge_busy(nid, self.LOG_APPEND_US)
+            sub.add(self.LOG_APPEND_US)
+        finally:
+            self.net.end_op()
+        commit_us = sub.now_us
+        self.journal.setdefault(partition_id, []).append(
+            {"mvcc": sm.mvcc, "ack_us": ack_us, "commit_us": commit_us})
+        return {"v": result, "mvcc": sm.mvcc, "commit_us": commit_us}
 
     def read(self, partition_id: int, op: str, *args: Any) -> Any:
         """Read op: served from the leader's in-memory state (sequential

@@ -111,6 +111,15 @@ class MetaSession:
                 age, self.neg_ttl_us if neg else self.ttl_us,
                 "negative dentry" if neg else "lease entry")
 
+    def _check_env(self, mp: Any, env: Dict) -> Dict:
+        """Async-commit invariant on every leased envelope: a timed read
+        must never observe a partition mvcc the journal has not yet
+        assigned (the ordering substrate read-your-writes rides on)."""
+        if _san.SAN is not None:
+            _san.SAN.check_mvcc_read(mp.pid, env["mvcc"],
+                                     self.client.net.current_op)
+        return env
+
     # ------------------------------------------------------------------ reads
     def lookup(self, parent: int, name: str,
                authoritative: bool = False, sync: bool = False) -> Dict:
@@ -170,8 +179,8 @@ class MetaSession:
         cl = self.client
         mp = cl._mp_for_inode(parent)
         try:
-            env = cl._meta_read(mp, "lookup", parent, name,
-                                method="read_leased")
+            env = self._check_env(mp, cl._meta_read(
+                mp, "lookup", parent, name, method="read_leased"))
         except NoSuchDentry:
             self.forget_dentry(parent, name, negative=True)
             raise _not_found(f"{parent}/{name}")
@@ -227,7 +236,8 @@ class MetaSession:
         cl = self.client
         mp = cl._mp_for_inode(ino)
         try:
-            env = cl._meta_read(mp, "get_inode", ino, method="read_leased")
+            env = self._check_env(mp, cl._meta_read(
+                mp, "get_inode", ino, method="read_leased"))
         except NoSuchInode:
             self.forget_inode(ino)
             raise _not_found(f"inode {ino}")
@@ -245,8 +255,9 @@ class MetaSession:
         a second round-trip."""
         cl = self.client
         mp = cl._mp_for_inode(route_ino)
-        env = cl._meta_read(mp, "stat_version", kind, key,
-                            method="read_leased", reply_bytes=16)
+        env = self._check_env(mp, cl._meta_read(
+            mp, "stat_version", kind, key,
+            method="read_leased", reply_bytes=16))
         sv = env["v"]
         if sv["mv"] == mv and mv >= 0:
             cl.stats["lease_revalidations"] += 1
@@ -284,7 +295,8 @@ class MetaSession:
                 return cached[0]
             cl.stats["meta_cache_misses"] += 1
         mp = cl._mp_for_inode(parent)
-        env = cl._meta_read(mp, "read_dir", parent, method="read_leased")
+        env = self._check_env(mp, cl._meta_read(
+            mp, "read_dir", parent, method="read_leased"))
         dentries = env["v"]
         granted, expires = self._grant(env["lease_us"])
         self._dirs[parent] = (dentries, granted, expires)
@@ -324,8 +336,8 @@ class MetaSession:
             mp = next(m for m in cl.meta_partitions if m.pid == pid)
             if active:
                 cl.stats["meta_cache_misses"] += len(inos)
-                env = cl._meta_read(mp, "batch_inode_get", inos,
-                                    method="read_leased")
+                env = self._check_env(mp, cl._meta_read(
+                    mp, "batch_inode_get", inos, method="read_leased"))
                 for iv in env["v"]:
                     self.note_inode(iv, lease_us=env["lease_us"])
                     out[iv["inode"]] = iv

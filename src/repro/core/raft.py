@@ -272,6 +272,15 @@ class RaftMember:
         ni = self.last_index() + 1
         self.next_index = {p: ni for p in self.peers if p != self.node_id}
         self.match_index = {p: 0 for p in self.peers if p != self.node_id}
+        # §5.4.2 keeps ``_advance_commit`` from committing PRIOR-term entries
+        # by counting replicas, so a fresh leader would sit on a fully
+        # replicated-but-uncommitted tail (e.g. async-acked metadata
+        # mutations mid-failover) until the next client proposal.  The
+        # standard fix: append a no-op entry in the NEW term immediately —
+        # committing it commits (and applies) the whole surviving prefix,
+        # which is exactly the journal replay that makes the new leader's
+        # tree equal the acked history.
+        self.log.append(LogEntry(self.term, ("", -1, None)))
         self.broadcast_append()  # assert leadership immediately
 
     # ---- replication -----------------------------------------------------
@@ -381,6 +390,8 @@ class RaftMember:
             self.applied += 1
             entry = self.entry_at(self.applied)
             client_id, seq, payload = entry.cmd
+            if payload is None:
+                continue            # leadership-change no-op: nothing to apply
             if client_id and (client_id, seq) in self.dedup:
                 continue
             try:

@@ -394,7 +394,15 @@ class NetStats:
 class Network:
     """Synchronous RPC fabric with fault injection and cost accounting."""
 
+    # process-wide creation counter: (net_serial, timeline_epoch) names one
+    # virtual timeline uniquely, so observers (the sanitizer's async-commit
+    # records) can tell entries from a previous cluster's clock apart from
+    # live ones.  Deterministic: depends only on construction order.
+    _created = 0
+
     def __init__(self, model: Optional[LatencyModel] = None, seed: int = 0):
+        self.net_serial = Network._created
+        Network._created += 1
         self.model = model or LatencyModel()
         self.stats = NetStats()
         self.rng = random.Random(seed)
@@ -412,6 +420,12 @@ class Network:
         # FIFO service queues, created on demand: "nic:<node>", "disk:<node>",
         # "fuse:<client>" — the discrete-event engine's shared state
         self.resources: Dict[str, Resource] = {}
+        # monotonic timeline epoch, bumped by reset_accounting(): virtual
+        # times parked across a reset (e.g. async-commit ack windows held by
+        # clients) belong to the OLD timeline and must not advance ops on
+        # the new one — holders stamp parked times with the epoch and drop
+        # entries whose epoch no longer matches
+        self.timeline_epoch = 0
 
     def resource(self, name: str) -> Resource:
         res = self.resources.get(name)
@@ -425,6 +439,7 @@ class Network:
     def reset_accounting(self) -> None:
         self.busy_us.clear()
         self.stats = NetStats()
+        self.timeline_epoch += 1
         for res in self.resources.values():
             res.reset()
 

@@ -98,11 +98,14 @@ def _oserror(exc: Exception, path: str) -> CfsOSError:
 
 @dataclass
 class _OpenFile:
-    """One fd-table slot."""
+    """One fd-table slot.  ``file`` is None for a DIRECTORY fd (an
+    O_RDONLY open of a directory — the handle POSIX dir-fsync needs);
+    ``dir_ino`` then carries the directory's inode."""
     fd: int
     path: str
     flags: int
-    file: CfsFile
+    file: Optional[CfsFile]
+    dir_ino: Optional[int] = None
 
     @property
     def readable(self) -> bool:
@@ -191,16 +194,46 @@ class CfsVfs:
         self._fds[fd] = _OpenFile(fd, path, flags, f)
         return fd
 
+    def _alloc_dir_fd(self, path: str, flags: int, ino: int) -> int:
+        fd = self._next_fd
+        self._next_fd += 1
+        self._fds[fd] = _OpenFile(fd, path, flags, None, dir_ino=ino)
+        return fd
+
     def _of(self, fd: int) -> _OpenFile:
         of = self._fds.get(fd)
         if of is None:
             raise CfsOSError(errno.EBADF, f"fd {fd}")
         return of
 
+    def _file(self, of: _OpenFile) -> CfsFile:
+        if of.file is None:
+            raise CfsOSError(errno.EISDIR, of.path)
+        return of.file
+
     # ------------------------------------------------------------ open/close
     def open(self, path: str, flags: int = O_RDONLY, mode: int = 0o644) -> int:
         """open(2): returns an integer fd.  ``mode`` is accepted for POSIX
-        shape (permission bits are not modeled)."""
+        shape (permission bits are not modeled).
+
+        An O_RDONLY open of a directory returns a DIRECTORY fd — the
+        handle ``fsync`` needs to act as the dir-fsync durability barrier
+        over async metadata commits.  Write-mode directory opens keep the
+        seed's EISDIR, and byte I/O on a directory fd raises EISDIR."""
+        if (flags & O_ACCMODE) == O_RDONLY and not flags & (O_CREAT | O_TRUNC):
+            norm = posixpath.normpath(path)
+            if norm in ("/", "//"):
+                return self._alloc_dir_fd(path, flags, ROOT_INODE)
+            _, _, dentry = self._resolve(path)
+            if dentry is None:
+                raise CfsOSError(errno.ENOENT, path)
+            if dentry["type"] == InodeType.DIR:
+                return self._alloc_dir_fd(path, flags, dentry["inode"])
+            try:
+                f = self.client.open(dentry["inode"], "r")
+            except (FsError, MetaError) as e:
+                raise _oserror(e, path)
+            return self._alloc_fd(path, flags, f)
         f = self.open_file(path, flags)
         if flags & O_APPEND:
             # POSIX: O_APPEND pins WRITES to EOF (write/pwrite re-seek there)
@@ -258,6 +291,9 @@ class CfsVfs:
 
     def close(self, fd: int) -> None:
         of = self._of(fd)
+        if of.file is None:
+            del self._fds[fd]                   # directory fd: free the slot
+            return
         try:
             of.file.close()                     # flush + meta sync
         except (FsError, MetaError) as e:
@@ -278,7 +314,7 @@ class CfsVfs:
             raise CfsOSError(errno.EBADF, of.path)
         if offset < 0:
             raise CfsOSError(errno.EINVAL, of.path)
-        f = of.file
+        f = self._file(of)
         saved = f.pos
         f.seek(offset)
         try:
@@ -294,7 +330,7 @@ class CfsVfs:
             raise CfsOSError(errno.EBADF, of.path)
         if offset < 0:
             raise CfsOSError(errno.EINVAL, of.path)
-        f = of.file
+        f = self._file(of)
         saved = f.pos
         if of.flags & O_APPEND:
             f.seek(f.size)                      # O_APPEND: offset is ignored
@@ -317,7 +353,7 @@ class CfsVfs:
         if not of.readable:
             raise CfsOSError(errno.EBADF, of.path)
         try:
-            return of.file.read(size)
+            return self._file(of).read(size)
         except (FsError, MetaError) as e:
             raise _oserror(e, of.path)
 
@@ -326,10 +362,11 @@ class CfsVfs:
         of = self._of(fd)
         if not of.writable:
             raise CfsOSError(errno.EBADF, of.path)
+        f = self._file(of)
         if of.flags & O_APPEND:
-            of.file.seek(of.file.size)
+            f.seek(f.size)
         try:
-            return of.file.write(data)
+            return f.write(data)
         except (FsError, MetaError) as e:
             raise _oserror(e, of.path)
 
@@ -337,7 +374,7 @@ class CfsVfs:
         of = self._of(fd)
         if offset < 0:
             raise CfsOSError(errno.EINVAL, of.path)
-        of.file.seek(offset)
+        self._file(of).seek(offset)
         return offset
 
     def ftruncate(self, fd: int, size: int) -> None:
@@ -347,15 +384,20 @@ class CfsVfs:
         if size < 0:
             raise CfsOSError(errno.EINVAL, of.path)
         try:
-            of.file.truncate(size)
+            self._file(of).truncate(size)
         except (FsError, MetaError) as e:
             raise _oserror(e, of.path)
 
     def fstat(self, fd: int) -> Dict:
         """Attributes from the handle: cached inode view with the LIVE size
         and extent map (unflushed appends included), like a kernel's
-        in-core inode."""
+        in-core inode.  A directory fd serves the session getattr."""
         of = self._of(fd)
+        if of.file is None:
+            try:
+                return dict(self.client.session.getattr(of.dir_ino))
+            except (FsError, MetaError) as e:
+                raise _oserror(e, of.path)
         f = of.file
         view = dict(f.inode)
         view["size"] = f.size
@@ -370,15 +412,28 @@ class CfsVfs:
         commits the whole prefix, so fsync waits for exactly that)."""
         of = self._of(fd)
         try:
-            of.file.flush()
+            self._file(of).flush()
         except (FsError, MetaError) as e:
             raise _oserror(e, of.path)
 
     def fsync(self, fd: int) -> None:
         """fsync(2): flush + drain the pipelined append window + sync the
         meta node; returns only when every byte written through this fd is
-        committed on ALL replicas of its extents."""
+        committed on ALL replicas of its extents.
+
+        On a DIRECTORY fd this is the async metadata durability barrier:
+        drain the unacked commit window of the partition owning the
+        directory's inode (a child's dentry — and, coalesced, its inode —
+        lives on that same partition), so every namespace mutation acked
+        under this directory is raft-committed before fsync returns."""
         of = self._of(fd)
+        if of.file is None:
+            try:
+                pid = self.client._mp_for_inode(of.dir_ino).pid
+            except (FsError, MetaError) as e:
+                raise _oserror(e, of.path)
+            self.client.drain_meta_window(pid)
+            return
         try:
             of.file.fsync()
         except (FsError, MetaError) as e:
@@ -552,7 +607,7 @@ class CfsVfs:
     # ---------------------------------------------------------- maintenance
     def handle(self, fd: int) -> CfsFile:
         """Low-level escape hatch (tools/demos): the CfsFile behind an fd."""
-        return self._of(fd).file
+        return self._file(self._of(fd))
 
     def open_fds(self) -> List[int]:
         return sorted(self._fds)

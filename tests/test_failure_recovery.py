@@ -2,7 +2,8 @@
 
 import pytest
 
-from repro.core import CfsCluster
+from repro.core import CfsCluster, O_RDONLY
+from repro.core.fsck import fsck
 
 
 @pytest.fixture()
@@ -127,6 +128,79 @@ def test_orphan_inode_on_dentry_failure(cluster):
     with pytest.raises(Exception):
         mnt.client.create(1, "dup")
     assert not mnt.client.orphan_inodes
+
+
+def test_async_crash_mid_burst_replays_acked_prefix(cluster):
+    """Async commits (PR 7): kill the meta leader in the middle of an
+    early-acked mkdir burst; after re-election the journal (raft log tail)
+    replays, and the surviving tree equals the acked history — every
+    mutation the leader acked resolves on the new leader, and fsck finds
+    no orphans, dangling dentries, or nlink drift (promoted from
+    examples/failover_demo.py step 3)."""
+    mnt = cluster.mount("v")
+    mnt.mkdir("/burst")
+    ino = mnt.stat("/burst")["inode"]
+    mp = mnt.client._mp_for_inode(ino)
+    names = [f"d{i}" for i in range(12)]
+    op = cluster.net.begin_op(at=0.0)
+    try:
+        for n in names:
+            mnt.mkdir(f"/burst/{n}")
+    finally:
+        cluster.net.end_op()
+    # the burst really went through the early-ack journal path
+    assert mnt.client.stats["meta_async_acks"] >= len(names)
+    assert mnt.client._meta_unacked.get(mp.pid), "window should be in flight"
+    gid = f"mp{mp.pid}"
+    leader = cluster.rc.leader_of(gid)
+    cluster.kill_node(leader)
+    cluster.rc.tick_all(40)                  # elections take simulated time
+    assert cluster.rc.leader_of(gid) not in (None, leader)
+    mnt2 = cluster.mount("v")
+    assert sorted(mnt2.readdir("/burst")) == sorted(names)
+    for n in names:
+        assert mnt2.stat(f"/burst/{n}")["type"] == 1  # InodeType.DIR
+    report = fsck(cluster, "v")
+    assert report.clean, (report.orphan_inodes, report.dangling_dentries,
+                          report.nlink_drift)
+
+
+def test_async_crash_after_barrier_keeps_barriered_ops(cluster):
+    """Async commits (PR 7): a drained durability barrier (fsync on a
+    directory fd) is the client-visible commit point — ops acked before
+    the barrier ALL survive a leader crash, and the replayed tree is
+    fsck-clean."""
+    mnt = cluster.mount("v")
+    vfs = mnt.vfs
+    mnt.mkdir("/jdir")
+    ino = mnt.stat("/jdir")["inode"]
+    mp = mnt.client._mp_for_inode(ino)
+    barriered = [f"b{i}" for i in range(8)]
+    op = cluster.net.begin_op(at=0.0)
+    try:
+        for n in barriered:
+            mnt.mkdir(f"/jdir/{n}")
+        fd = vfs.open("/jdir", O_RDONLY)     # directory fd (PR 7 surface)
+        vfs.fsync(fd)                        # drains the partition's window
+        vfs.close(fd)
+        t_barrier = op.now_us
+        # unbarriered tail after the barrier
+        for n in ("tail0", "tail1"):
+            mnt.mkdir(f"/jdir/{n}")
+    finally:
+        cluster.net.end_op()
+    assert mnt.client.stats["meta_barriers"] >= 1
+    # the barrier waited out every background commit it covered
+    assert t_barrier >= 400.0, "drain should advance past the raft round"
+    gid = f"mp{mp.pid}"
+    cluster.kill_node(cluster.rc.leader_of(gid))
+    cluster.rc.tick_all(40)
+    mnt2 = cluster.mount("v")
+    surviving = set(mnt2.readdir("/jdir"))
+    assert set(barriered) <= surviving       # barriered ops all replayed
+    report = fsck(cluster, "v")
+    assert report.clean, (report.orphan_inodes, report.dangling_dentries,
+                          report.nlink_drift)
 
 
 def test_client_leader_cache_reduces_retries(cluster):

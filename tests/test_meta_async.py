@@ -1,0 +1,284 @@
+"""Async metadata commits (PR 7): early-ack journal path, bounded unacked
+window, durability barriers, dir-fd fsync surface, sanitizer invariants.
+
+The async mode is a *timing-model* overlay: every mutation still applies
+through the partition's raft group in program order (state is identical to
+the sync path), but a timed client op only pays the request transmit — the
+ack and the background raft round land in the per-partition window, and
+``drain_meta_window`` (dir-fsync / file close) is the durability barrier.
+"""
+
+import errno
+
+import pytest
+
+from repro.core import (CfsCluster, CfsOSError, O_CREAT, O_RDONLY, O_WRONLY)
+from repro.core.simnet import OpTimer
+from repro.core.types import InodeType
+from repro.analysis import sanitizer
+from repro.analysis.sanitizer import HBViolation
+
+
+@pytest.fixture()
+def cluster():
+    c = CfsCluster(n_meta=4, n_data=4, seed=11)
+    c.create_volume("v", n_meta_partitions=2, n_data_partitions=4)
+    return c
+
+
+def _timed_mkdir_us(cluster, mnt, path, at):
+    op = cluster.net.begin_op(at=at)
+    try:
+        mnt.mkdir(path)
+    finally:
+        cluster.net.end_op()
+    return op.now_us - at
+
+
+# ---------------------------------------------------------------- ack path
+def test_async_ack_pays_only_the_request_transmit(cluster):
+    """The A/B that motivates the PR: an async-acked mkdir returns in the
+    time the request needs to leave the client NIC (~µs); the seed sync
+    path pays the client round plus the full raft round (~800µs+)."""
+    mnt = cluster.mount("v")
+    lat_async = _timed_mkdir_us(cluster, mnt, "/a", 0.0)
+    mnt.client.meta_async = False
+    lat_sync = _timed_mkdir_us(cluster, mnt, "/b", 10_000.0)
+    assert lat_sync > 400.0
+    assert lat_async < 0.1 * lat_sync
+    assert mnt.client.stats["meta_async_acks"] >= 1
+
+
+def test_untimed_ops_take_the_seed_sync_fallback(cluster):
+    """Outside a timed op there is no virtual clock to early-ack against:
+    the mutation takes the seed propose path and parks nothing."""
+    mnt = cluster.mount("v")
+    mnt.mkdir("/plain")
+    assert mnt.client.stats["meta_async_acks"] == 0
+    assert not any(mnt.client._meta_unacked.values())
+    assert not mnt.client._meta_commit_hw
+
+
+def test_async_state_identical_to_sync_state():
+    """Durability is backgrounded, application is not: the same workload
+    with async on and off yields the same tree and the same mvccs."""
+    trees = []
+    for on in (True, False):
+        c = CfsCluster(n_meta=4, n_data=4, seed=11)
+        c.create_volume("v", n_meta_partitions=2, n_data_partitions=4)
+        mnt = c.mount("v")
+        mnt.client.meta_async = on
+        op = c.net.begin_op(at=0.0)
+        try:
+            mnt.mkdir("/d")
+            for i in range(6):
+                mnt.mkdir(f"/d/s{i}")
+            mnt.write_file("/d/f.bin", b"x" * 4096)
+        finally:
+            c.net.end_op()
+        mvccs = {mp.pid: c.meta_nodes[c.rc.leader_of(f"mp{mp.pid}")]
+                 .partitions[mp.pid].mvcc
+                 for mp in mnt.client.meta_partitions}
+        trees.append((sorted(mnt.readdir("/d")), mnt.read_file("/d/f.bin"),
+                      mvccs))
+    assert trees[0] == trees[1]
+
+
+# ------------------------------------------------------------------ window
+def test_window_bounds_inflight_and_stalls_on_oldest_ack(cluster):
+    """The in-flight window caps at CFS_META_JOURNAL_DEPTH per partition;
+    a full window stalls the client to the oldest early ack (one NIC
+    round), not to its background commit."""
+    mnt = cluster.mount("v")
+    mnt.mkdir("/w")
+    pid = mnt.client._mp_for_inode(mnt.stat("/w")["inode"]).pid
+    mnt.client.meta_journal_depth = 4
+    op = cluster.net.begin_op(at=0.0)
+    try:
+        for i in range(8):
+            mnt.mkdir(f"/w/c{i}")
+        window = mnt.client._meta_unacked[pid]
+        assert len(window) == 4
+        assert mnt.client.stats["meta_async_stalls"] == 4
+        # a stall waits one ack round, never a full commit: the op frontier
+        # sits below the oldest parked background commit
+        assert op.now_us < min(commit for (_ep, _ack, commit) in window)
+    finally:
+        cluster.net.end_op()
+
+
+def test_barrier_drains_to_commit_high_water(cluster):
+    """drain_meta_window advances the caller to the partition's latest
+    background commit (FIFO journal ⇒ the high-water covers the whole
+    acked prefix) and empties the window."""
+    mnt = cluster.mount("v")
+    mnt.mkdir("/bar")
+    pid = mnt.client._mp_for_inode(mnt.stat("/bar")["inode"]).pid
+    op = cluster.net.begin_op(at=0.0)
+    try:
+        for i in range(5):
+            mnt.mkdir(f"/bar/c{i}")
+        hw_ep, hw_commit = mnt.client._meta_commit_hw[pid]
+        assert op.now_us < hw_commit
+        mnt.client.drain_meta_window(pid)
+        assert op.now_us >= hw_commit
+        assert mnt.client.stats["meta_barriers"] == 1
+        assert mnt.client.stats["meta_barrier_stalls"] == 1
+        assert not mnt.client._meta_unacked[pid]
+        assert pid not in mnt.client._meta_commit_hw
+        # draining an already-drained partition is a no-op
+        t = op.now_us
+        mnt.client.drain_meta_window(pid)
+        assert op.now_us == t
+        assert mnt.client.stats["meta_barriers"] == 1
+    finally:
+        cluster.net.end_op()
+
+
+def test_file_fsync_is_a_full_durability_barrier(cluster):
+    """fsync/close of a created file drains EVERY partition's window — the
+    POSIX contract the ISSUE names (close of a created file implies the
+    namespace mutations that created it are durable)."""
+    mnt = cluster.mount("v")
+    op = cluster.net.begin_op(at=0.0)
+    try:
+        f = mnt.open("/durable.bin", "w")
+        f.write(b"z" * 1024)
+        f.fsync()
+        assert not mnt.client._meta_commit_hw      # everything drained
+        assert mnt.client.stats["meta_barriers"] >= 1
+        f.close()
+    finally:
+        cluster.net.end_op()
+
+
+def test_window_entries_die_with_their_timeline(cluster):
+    """Entries parked across a reset_accounting() (benchmark phase switch)
+    belong to the old virtual clock: they must neither stall nor advance
+    ops on the new timeline."""
+    mnt = cluster.mount("v")
+    mnt.mkdir("/tl")
+    pid = mnt.client._mp_for_inode(mnt.stat("/tl")["inode"]).pid
+    op = cluster.net.begin_op(at=0.0)
+    try:
+        for i in range(4):
+            mnt.mkdir(f"/tl/c{i}")
+    finally:
+        cluster.net.end_op()
+    assert mnt.client._meta_unacked[pid]
+    cluster.net.reset_accounting()                 # new timeline epoch
+    op = cluster.net.begin_op(at=0.0)
+    try:
+        mnt.client.drain_meta_window(pid)
+        assert op.now_us == 0.0                    # stale commits ignored
+        assert mnt.client.stats["meta_barriers"] == 0
+    finally:
+        cluster.net.end_op()
+
+
+# ------------------------------------------------------------ dir-fd fsync
+def test_dir_fd_open_fsync_close(cluster):
+    """O_RDONLY on a directory yields a DIRECTORY fd; fsync on it is the
+    partition durability barrier; byte I/O on it stays EISDIR."""
+    mnt = cluster.mount("v")
+    vfs = mnt.vfs
+    mnt.mkdir("/dfd")
+    op = cluster.net.begin_op(at=0.0)
+    try:
+        for i in range(3):
+            mnt.mkdir(f"/dfd/c{i}")
+        fd = vfs.open("/dfd", O_RDONLY)
+        st = vfs.fstat(fd)
+        assert st["type"] == InodeType.DIR
+        with pytest.raises(CfsOSError) as ei:
+            vfs.read(fd, 10)
+        assert ei.value.errno == errno.EISDIR
+        before = op.now_us
+        vfs.fsync(fd)                              # drains /dfd's partition
+        assert op.now_us > before
+        assert mnt.client.stats["meta_barriers"] == 1
+        vfs.close(fd)
+        # root opens as a directory fd too; idle fsync is a no-op
+        rfd = vfs.open("/", O_RDONLY)
+        vfs.fsync(rfd)
+        vfs.close(rfd)
+    finally:
+        cluster.net.end_op()
+
+
+def test_write_mode_dir_open_keeps_eisdir(cluster):
+    mnt = cluster.mount("v")
+    mnt.mkdir("/nope")
+    with pytest.raises(CfsOSError) as ei:
+        mnt.vfs.open("/nope", O_WRONLY)
+    assert ei.value.errno == errno.EISDIR
+    with pytest.raises(CfsOSError) as ei:
+        mnt.vfs.open("/nope", O_RDONLY | O_CREAT)
+    assert ei.value.errno == errno.EISDIR
+
+
+# --------------------------------------------------------------- sanitizer
+@pytest.fixture
+def san():
+    prev = sanitizer.SAN
+    s = sanitizer.enable()
+    yield s
+    sanitizer.SAN = prev
+
+
+def _tracked_op(san_inst, t=0.0):
+    op = OpTimer(start_us=t, timed=True)
+    san_inst.on_begin_op(op)
+    return op
+
+
+def test_sanitizer_trips_on_unassigned_mvcc_read(san):
+    san.note_mvcc_assign(7, 5)
+    op = _tracked_op(san)
+    san.check_mvcc_read(7, 5, op)                  # at the high-water: fine
+    with pytest.raises(HBViolation, match="mvcc violation"):
+        san.check_mvcc_read(7, 6, op)              # journal never assigned 6
+    assert san.violations == 1
+
+
+def test_sanitizer_trips_on_leaky_barrier(san):
+    tl = (0, 0)                                    # (net_serial, epoch)
+    op = _tracked_op(san, t=0.0)
+    san.note_async_ack(("c0", 1), 500.0, op, tl)
+    with pytest.raises(HBViolation, match="barrier violated"):
+        san.check_async_barrier(("c0", 1), op, tl)  # drained at t=0 < 500
+    assert san.violations == 1
+    # a drain that waited out the commit passes (and clears the slate)
+    op2 = _tracked_op(san, t=0.0)
+    san.note_async_ack(("c0", 2), 500.0, op2, tl)
+    op2.advance_to(500.0)
+    san.check_async_barrier(("c0", 2), op2, tl)
+    assert san.violations == 1
+    # records parked on a DEAD timeline are discarded, not enforced
+    op3 = _tracked_op(san, t=0.0)
+    san.note_async_ack(("c0", 3), 500.0, op3, tl)
+    san.check_async_barrier(("c0", 3), op3, (0, 1))  # epoch moved on
+    assert san.violations == 1
+
+
+def test_sanitized_async_workload_is_clean(san):
+    """A full async workload — burst, dir fsync, file close — under the
+    sanitizer: the mvcc and barrier invariants hold on the real paths."""
+    c = CfsCluster(n_meta=4, n_data=4, seed=13)
+    c.create_volume("v", n_meta_partitions=2, n_data_partitions=4)
+    mnt = c.mount("v")
+    vfs = mnt.vfs
+    mnt.mkdir("/ok")
+    op = c.net.begin_op(at=0.0)
+    try:
+        for i in range(6):
+            mnt.mkdir(f"/ok/c{i}")
+        fd = vfs.open("/ok", O_RDONLY)
+        vfs.fsync(fd)
+        vfs.close(fd)
+        mnt.write_file("/ok/f.bin", b"y" * 2048)
+        assert sorted(mnt.readdir("/ok")) == sorted(
+            [f"c{i}" for i in range(6)] + ["f.bin"])
+    finally:
+        c.net.end_op()
+    assert san.violations == 0

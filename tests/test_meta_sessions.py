@@ -355,6 +355,9 @@ def _mkdir_latency_us(fanout: bool, replicas: int) -> float:
     try:
         c = _cluster(replicas=replicas, n_meta=6)
         vfs = c.mount("v").vfs
+        # sync commits: async early-acks would hide the replication legs
+        # this test measures from the client's clock
+        vfs.client.meta_async = False
         c.net.reset_accounting()
         with timed(c.net, 0.0) as op:
             vfs.mkdir("/d")
