@@ -100,26 +100,52 @@ def run_streams(
     procs: int,
     weight: int = 1,          # logical ops per thunk (e.g. stats per dir_stat)
     trace: Optional[List[Tuple[float, int]]] = None,
+    samples: Optional[List[Tuple[float, float]]] = None,
+    events: Optional[List[Tuple[float, Callable[[], None]]]] = None,
+    periodic: Optional[List[Tuple[float, Callable[[], None]]]] = None,
 ) -> BenchResult:
     """streams: one (client_id, ops) per (client, proc) stream; ``ops`` is
     any iterable of thunks (list or generator) — the engine pulls the next
     op when the previous one completes in virtual time.
 
     ``trace``, if given, collects (dispatch_time_us, stream_index) tuples —
-    the event order, used by the determinism property test."""
+    the event order, used by the determinism property test.
+
+    ``samples``, if given, collects (submit_time_us, latency_us) per op so
+    suites can bucket tail latency over the run's timeline.
+
+    ``events`` is a list of one-shot (at_us, fn) control actions — a node
+    join, an OSD add — and ``periodic`` a list of (period_us, fn) recurring
+    ones (the RM's heartbeat/split loop).  Both run as TIMED ops at their
+    scheduled virtual time, so the work they trigger (migration IO, split
+    RPCs) queues on the same simulated hardware as the foreground streams.
+    Periodic actions re-arm only while op streams are still live."""
     net.reset_accounting()
     sched = EventScheduler()
     iters = [iter(ops) for _, ops in streams]
     lat: List[float] = []
     done = 0
+    live = len(streams)
     makespan = 0.0
     t0 = time.perf_counter()
 
+    def control(t: float, fn: Callable[[], None],
+                period: Optional[float] = None) -> None:
+        nonlocal live
+        op = net.begin_op(at=t)
+        try:
+            fn()
+        finally:
+            net.end_op()
+        if period is not None and live > 0:
+            sched.at(op.now_us + period, control, fn, period)
+
     def dispatch(t: float, si: int) -> None:
-        nonlocal done, makespan
+        nonlocal done, live, makespan
         try:
             thunk = next(iters[si])
         except StopIteration:
+            live -= 1
             return
         if trace is not None:
             trace.append((round(t, 3), si))
@@ -135,12 +161,18 @@ def run_streams(
             net.end_op()
         end = op.now_us
         lat.append((end - t) / weight)
+        if samples is not None:
+            samples.append((round(t, 3), round((end - t) / weight, 3)))
         done += 1
         makespan = max(makespan, end)
         sched.at(end, dispatch, si)      # next op of this stream
 
     for si in range(len(streams)):
         sched.at(0.0, dispatch, si)
+    for at, fn in (events or []):
+        sched.at(at, control, fn)
+    for period, fn in (periodic or []):
+        sched.at(period, control, fn, period)
     sched.run()
 
     wall = (time.perf_counter() - t0) * 1e6

@@ -1,59 +1,176 @@
-"""Capacity-expansion benchmark — the paper's §2.3.1 no-rebalancing claim.
+"""Capacity-expansion benchmark — elasticity under load (§2.3, PR 8).
 
-Fill both systems, add storage nodes, and measure (a) bytes migrated and
-(b) the simulated time the expansion costs the cluster.  CFS:
-utilization-based placement moves NOTHING; Ceph-like: CRUSH remaps a
-~1/n fraction of every object."""
+The paper's claim is not just "no data moves when nodes join" (§2.3.1) —
+it is that the metadata plane GROWS while serving traffic: the resource
+manager's control loop watches per-partition entry counts from timed
+heartbeats and splits the max-id meta partition (Algorithm 1) onto the
+emptiest nodes, preferring fresh joins at utilization 0.
+
+So this suite is an EVENT TIMELINE, not a static before/after diff: an
+mdtest-style create storm runs while
+
+  * a meta node and a data node JOIN mid-run (one-shot events),
+  * the RM's timed control round (heartbeats + split check) fires
+    periodically on the same simulated hardware as the foreground ops,
+
+and records per-op latency samples bucketed over the run:
+
+    files_at_split  — how far the storm had progressed at each cut
+    bytes_moved     — bytes migrated off pre-existing data nodes
+                      (CFS: 0 — placement only targets the joiners for
+                      NEW partitions; the Ceph-like baseline CRUSH-remaps
+                      ~1/n of every object on the OSD add, and that
+                      backfill queues on the same OSD disks as the storm)
+    p99_timeline_us — p99 latency per time bucket; the cliff ratio
+                      max(bucket_p99)/median(bucket_p99) exposes the
+                      rebalance stall CFS's split-without-move avoids
+
+Three rows: ``cfs`` (elastic: starts from ONE open-ended meta partition,
+auto-split knob on), ``cfs-static`` (pre-provisioned partitions, RM
+control loop disarmed — the seed's static baseline), and ``ceph``
+(CRUSH rebalance on join).  Same-seed reruns are bit-identical.
+"""
 
 from __future__ import annotations
 
-from typing import List
+from typing import Dict, List, Tuple
 
 from repro.baseline.cephlike import CephLikeCluster, CephLikeMount
 from repro.core import CfsCluster
 
-FILE = 256 * 1024
-N_FILES = 40
+from .common import BenchResult, percentile, run_streams
+
+FILE = 16 * 1024         # small-file create storm (metadata-bound)
+N_BUCKETS = 16           # p99 timeline resolution
+
+# full sweep: 4 clients x 8 procs x 40 creates = 1280 files; the elastic
+# row starts from ONE partition sized so the storm forces >= 2 splits,
+# and the joins land mid-storm so the baseline's backfill races live IO
+FULL = dict(clients=4, procs=8, files=40, max_entries=420,
+            hb_us=1500.0, join_us=(45000.0, 90000.0))
+SMOKE = dict(clients=2, procs=2, files=10, max_entries=56,
+             hb_us=800.0, join_us=(8000.0, 16000.0))
+
+
+def _timeline(samples: List[Tuple[float, float]]
+              ) -> Tuple[List[float], float]:
+    """Bucket (submit_us, lat_us) samples into N_BUCKETS equal windows and
+    return (per-bucket p99, cliff ratio max/median).  The first bucket is
+    warm-up (session/leader caches cold on every system) and is excluded
+    from the ratio — the cliff of interest is the MID-RUN stall when a
+    node joins, not mount-time churn."""
+    if not samples:
+        return [], 0.0
+    horizon = max(t for t, _ in samples) + 1e-9
+    buckets: List[List[float]] = [[] for _ in range(N_BUCKETS)]
+    for t, lat in samples:
+        buckets[min(int(t / horizon * N_BUCKETS), N_BUCKETS - 1)].append(lat)
+    p99s = [percentile(sorted(b), 0.99) if b else 0.0 for b in buckets]
+    steady = [p for p in p99s[1:] if p > 0.0]
+    med = percentile(sorted(steady), 0.50)
+    return ([round(p, 3) for p in p99s],
+            round(max(steady) / max(med, 1e-9), 4) if steady else 0.0)
+
+
+def _storm_streams(mounts, procs: int, files: int):
+    """Per-proc private dir + `files` small-file creates inside it."""
+    streams = []
+    for ci, mnt in enumerate(mounts):
+        for pi in range(procs):
+            d = f"/s{ci}_{pi}"
+
+            def ops(mnt=mnt, d=d):
+                yield lambda: mnt.mkdir(d)
+                for i in range(files):
+                    yield (lambda i=i, mnt=mnt, d=d:
+                           mnt.write_file(f"{d}/f{i}", bytes(FILE)))
+            streams.append((getattr(mnt, "client_id", None)
+                            or mnt.client.client_id, ops()))
+    return streams
+
+
+def _bench_cfs(label: str, p: Dict, elastic: bool) -> BenchResult:
+    c = CfsCluster(n_meta=4, n_data=6, extent_max_size=1024 * 1024,
+                   meta_max_entries=(p["max_entries"] if elastic else 1 << 20),
+                   seed=42)
+    c.create_volume("v", n_meta_partitions=(1 if elastic else 4),
+                    n_data_partitions=8)
+    if not elastic:
+        c.rm.autosplit = False          # seed's static control plane
+    c.rm.hb_period_us = p["hb_us"]
+    mounts = [c.mount("v") for _ in range(p["clients"])]
+
+    used_at_join: Dict[str, int] = {}
+
+    def join_meta() -> None:
+        used_at_join.update({nid: dn.disk.used
+                             for nid, dn in c.data_nodes.items()})
+        c.add_meta_node()
+
+    def join_data() -> None:
+        c.add_data_node()
+
+    samples: List[Tuple[float, float]] = []
+    r = run_streams("Expansion", label, c.net,
+                    _storm_streams(mounts, p["procs"], p["files"]),
+                    p["clients"], p["procs"], samples=samples,
+                    events=[(p["join_us"][0], join_meta),
+                            (p["join_us"][1], join_data)],
+                    periodic=[(p["hb_us"], c.control_tick)])
+
+    # migration = bytes leaving a pre-existing data node after the joins;
+    # CFS placement never re-homes an existing partition, so this is 0
+    moved = sum(max(0, used - c.data_nodes[nid].disk.used)
+                for nid, used in used_at_join.items())
+    p99s, cliff = _timeline(samples)
+    log = c.rm.split_log
+    r.extra = {
+        "files": p["clients"] * p["procs"] * p["files"],
+        "bytes_moved": moved,
+        "splits": len(log),
+        "files_at_split": [e["files"] for e in log],
+        "split_t_us": [round(e["t_us"], 1) for e in log],
+        "routing_epoch": c.rm.leader_sm().epoch,
+        "meta_partitions": len(c.rm.leader_sm().volumes["v"]["meta"]),
+        "wrong_range_redirects": sum(m.client.stats["wrong_range_redirects"]
+                                     for m in mounts),
+        "p99_cliff_ratio": cliff,
+        "p99_timeline_us": p99s,
+    }
+    return r
+
+
+def _bench_ceph(p: Dict) -> BenchResult:
+    ceph = CephLikeCluster(n_mds=4, n_osd=6, seed=42)
+    mounts = [CephLikeMount(ceph, f"c{i}") for i in range(p["clients"])]
+
+    moved: List[int] = []
+
+    def join_osd() -> None:
+        moved.append(ceph.add_osd()[1])
+
+    samples: List[Tuple[float, float]] = []
+    r = run_streams("Expansion", "ceph", ceph.net,
+                    _storm_streams(mounts, p["procs"], p["files"]),
+                    p["clients"], p["procs"], samples=samples,
+                    events=[(p["join_us"][1], join_osd)])
+    p99s, cliff = _timeline(samples)
+    r.extra = {
+        "files": p["clients"] * p["procs"] * p["files"],
+        "bytes_moved": sum(moved),
+        "splits": 0,
+        "p99_cliff_ratio": cliff,
+        "p99_timeline_us": p99s,
+    }
+    return r
 
 
 def run(out_rows: List[str], smoke: bool = False) -> List[dict]:
-    n_files = 8 if smoke else N_FILES
-    # ---- CFS ---------------------------------------------------------------
-    cfs = CfsCluster(n_meta=4, n_data=6, extent_max_size=1024 * 1024)
-    cfs.create_volume("v", n_meta_partitions=3, n_data_partitions=8)
-    mnt = cfs.mount("v")
-    for i in range(n_files):
-        mnt.write_file(f"/f{i}", bytes(FILE))
-    cfs.tick(2)
-    used_before = {nid: dn.disk.used for nid, dn in cfs.data_nodes.items()}
-    cfs.net.reset_accounting()
-    cfs.add_data_node()
-    cfs.add_data_node()
-    cfs.tick(2)
-    moved_cfs = sum(abs(cfs.data_nodes[nid].disk.used - u)
-                    for nid, u in used_before.items())
-    busy_cfs = sum(cfs.net.busy_us.values())
-
-    # ---- Ceph-like -----------------------------------------------------------
-    ceph = CephLikeCluster(n_mds=4, n_osd=6)
-    cmnt = CephLikeMount(ceph, "c0")
-    for i in range(n_files):
-        cmnt.write_file(f"/f{i}", bytes(FILE))
-    ceph.net.reset_accounting()
-    _, moved1 = ceph.add_osd()
-    _, moved2 = ceph.add_osd()
-    busy_ceph = sum(ceph.net.busy_us.values())
-
-    # columns line up with HEADER: the sim_iops slot carries bytes moved,
-    # the wall_us_per_op slot carries the expansion's busy time, and the
-    # latency/percentile slots are 0 (n/a for a one-shot migration)
-    out_rows.append(f"Expansion,cfs,-,-,{n_files},{moved_cfs},"
-                    f"{busy_cfs:.0f},0,0,0,0,none")
-    out_rows.append(f"Expansion,ceph,-,-,{n_files},{moved1 + moved2},"
-                    f"{busy_ceph:.0f},0,0,0,0,rebalance")
-    return [
-        {"test": "Expansion", "system": "cfs", "files": n_files,
-         "bytes_moved": moved_cfs, "busy_us": round(busy_cfs)},
-        {"test": "Expansion", "system": "ceph", "files": n_files,
-         "bytes_moved": moved1 + moved2, "busy_us": round(busy_ceph)},
+    p = SMOKE if smoke else FULL
+    results = [
+        _bench_cfs("cfs", p, elastic=True),
+        _bench_cfs("cfs-static", p, elastic=False),
+        _bench_ceph(p),
     ]
+    out_rows.extend(r.row() for r in results)
+    return [r.json_obj() for r in results]

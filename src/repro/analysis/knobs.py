@@ -86,6 +86,22 @@ _DECLS = [
          "Max unacked async metadata mutations in flight per partition",
          "synchronous commits (no unacked window)",
          "repro.core.client", 7),
+    Knob("CFS_META_AUTOSPLIT", "1", "bool",
+         "RM control loop auto-splits near-full max-id meta partitions",
+         "static placement (splits only on explicit admin calls)",
+         "repro.core.resource_manager", 8),
+    Knob("CFS_META_SPLIT_FRACTION", "0.8", "float",
+         "Entry fill fraction of max_entries that triggers a meta split",
+         "split as soon as the partition reports any entries",
+         "repro.core.resource_manager", 8),
+    Knob("CFS_META_SPLIT_DELTA", "65536", "int",
+         "Algorithm 1 Δ: inode headroom beyond maxInodeID at the range cut",
+         "cut exactly at maxInodeID (no headroom)",
+         "repro.core.resource_manager", 8),
+    Knob("CFS_META_HB_US", "50000", "float",
+         "Timed control-plane heartbeat/split-check period in virtual µs",
+         "no periodic control loop (driver ticks only)",
+         "repro.core.resource_manager", 8),
 ]
 
 KNOBS: Dict[str, Knob] = {k.name: k for k in _DECLS}

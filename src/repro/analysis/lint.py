@@ -337,7 +337,10 @@ class DirectProposeChecker(Checker):
     # sanctioned users.  Everything else must route through them so the
     # note_mutation invalidation hook (client) stays on the mutation path.
     exempt_modules = ("repro.core.raft", "repro.core.multiraft")
-    exempt_quals = {("repro.core.client", "CfsClient._meta_propose")}
+    # _meta_propose_once is the transport half of the same funnel: the
+    # public _meta_propose wraps it with the WrongRange redirect (PR 8)
+    exempt_quals = {("repro.core.client", "CfsClient._meta_propose"),
+                    ("repro.core.client", "CfsClient._meta_propose_once")}
 
     def applies(self, module: str) -> bool:
         return module.startswith("repro.core") and \

@@ -245,9 +245,17 @@ class CephLikeCluster:
             if cur is None or new_primary.node_id == cur.node_id:
                 continue
             data = cur.objects[name]
-            # migration: read + network + write on the new home
-            cur.disk.read_cost(len(data))
-            self.net.charge("mig", new_primary.node_id, len(data), "rebalance")
+            # migration: read + network + write on the new home.  Under a
+            # timed op (rebalance racing client IO in a benchmark timeline)
+            # the reads/writes queue on the OSDs' disk resources like any
+            # other IO — backfill contends with the foreground, which is
+            # exactly the p99 cliff CFS's split-without-move design avoids.
+            op = self.net.current_op
+            cur.disk.read_cost(len(data), op)
+            lat = self.net.charge("mig", new_primary.node_id, len(data),
+                                  "rebalance")
+            if op is not None:
+                op.add(lat)
             new_primary.write_object(name, data)
             cur.delete_object(name)
             moved += len(data)

@@ -39,6 +39,7 @@ invalidated on seek/write/truncate, drained at the fsync/close barriers.
 
 from __future__ import annotations
 
+import bisect
 import math
 import random
 import zlib
@@ -49,7 +50,7 @@ from ..analysis import knobs
 from ..analysis import sanitizer as _san
 from .extent_store import ExtentError
 from .meta_node import (DentryExists, MetaError, NoSuchDentry, NoSuchInode,
-                        PartitionFull, RangeExhausted)
+                        PartitionFull, RangeExhausted, WrongRange)
 from .raft import NotCommitted, NotLeader
 from .simnet import NetError, Network, OpTimer
 from .types import (MAX_UINT64, PACKET_SIZE, ROOT_INODE,
@@ -174,6 +175,40 @@ class _DataPartition:
     status: str
 
 
+# arg index of the routing inode per mutation op — used to re-route a
+# payload after a WrongRange redirect (mirrors MetaPartitionSM.MUT_ROUTE)
+_MUT_ROUTE = {"create_dentry": 0, "delete_dentry": 0, "link_inc": 0,
+              "unlink_dec": 0, "evict": 0, "update_extents": 0}
+
+
+def _route_of(payload: Tuple) -> Optional[int]:
+    """The inode a mutation payload routes by, or None if the op is not
+    range-routed (create_inode allocates locally, set_end is an RM task)."""
+    op = payload[0]
+    if op == "batch":
+        for sub in payload[1]:
+            r = _route_of(sub)
+            if r is not None:
+                return r
+        return None
+    idx = _MUT_ROUTE.get(op)
+    if idx is None:
+        return None
+    arg = payload[1 + idx]
+    return arg if isinstance(arg, int) else None
+
+
+def _read_route_of(op: str, args: Tuple) -> Optional[int]:
+    """The inode a read routes by (batch_inode_get is best-effort server
+    side and never raises WrongRange, so it has no redirect route)."""
+    if op in ("lookup", "get_inode", "read_dir"):
+        return args[0]
+    if op == "stat_version":
+        kind, key = args[0], args[1]
+        return key if kind == "inode" else tuple(key)[0]
+    return None
+
+
 class CfsClient:
     """One mounted volume from one container's point of view."""
 
@@ -211,7 +246,16 @@ class CfsClient:
         # covers the whole acked prefix — drain_meta_window waits on it
         self._meta_commit_hw: Dict[int, Tuple[int, float]] = {}
         # ---- caches (§2.4) ----
+        # the meta table is kept sorted by range start (bisect routing) and
+        # keyed by the RM's routing epoch; -1 = never synced
         self.meta_partitions: List[_MetaPartition] = []
+        self._mp_starts: List[int] = []
+        self.routing_epoch = -1
+        # sibling pid -> old pid whose range a split re-homed onto it; the
+        # first mutation routed to the sibling drains the old partition's
+        # async journal window first (PR 7 barrier discipline extended to
+        # split-created partitions)
+        self._rehomed_from: Dict[int, int] = {}
         self.data_partitions: List[_DataPartition] = []
         # leader_cache holds WRITE leaders only (PB/raft), learned from
         # accepted mutations and NotLeader hints.  Read-serving replicas go
@@ -242,7 +286,9 @@ class CfsClient:
                       # ---- async metadata commit counters ----
                       "meta_async_acks": 0, "meta_async_stalls": 0,
                       "meta_barriers": 0, "meta_barrier_stalls": 0,
-                      "meta_barrier_stall_us": 0.0}
+                      "meta_barrier_stall_us": 0.0,
+                      # ---- split-aware routing counters ----
+                      "wrong_range_redirects": 0}
         # lease/version session over the inode/dentry caches (TTL knobs
         # CFS_META_TTL / CFS_META_NEG_TTL; ttl 0 = seed sync-on-open)
         from .meta_session import MetaSession
@@ -253,7 +299,8 @@ class CfsClient:
         self.sync_partitions(force=True)
 
     # ------------------------------------------------------------------ RM
-    def sync_partitions(self, force: bool = False) -> bool:
+    def sync_partitions(self, force: bool = False,
+                        min_epoch: Optional[int] = None) -> bool:
         """One-shot RPC to the RM (non-persistent connection).
 
         Unforced calls come from routing misses and are rate-limited to one
@@ -265,9 +312,20 @@ class CfsClient:
         — deliberate *bounded routing staleness*, capped at one window
         (default 1 ms of virtual time, three orders of magnitude tighter
         than the 1 s metadata lease TTL the namespace already tolerates);
-        recovery paths always ``force`` and are never stale."""
+        recovery paths always ``force`` and are never stale.
+
+        ``min_epoch`` is the WrongRange-redirect channel: the caller needs a
+        table at least that new.  If the cached table already satisfies it
+        there is nothing to fetch and no RPC happens at all — the epoch gate
+        that bounds a post-split burst of redirects across many procs to
+        ONE RM exchange per client.  Otherwise the fetch bypasses the
+        window (it is a recovery path) but still stamps ``_last_sync_us``."""
         op = self.net.current_op
         now = op.now_us if op is not None and op.timed else None
+        if min_epoch is not None:
+            if self.routing_epoch >= min_epoch:
+                return False
+            force = True
         if (not force and now is not None and self._last_sync_us is not None
                 and self.sync_window_us > 0
                 and 0.0 <= now - self._last_sync_us < self.sync_window_us):
@@ -280,34 +338,112 @@ class CfsClient:
             return False
         leader = self.rm.leader_id()
         view = self.net.call(self.client_id, leader, self.rm.client_view,
-                             self.volume, kind="client.rm")
+                             self.volume, self.routing_epoch,
+                             kind="client.rm")
         self.stats["rm_calls"] += 1
-        self.meta_partitions = [_MetaPartition(**m) for m in view["meta"]]
-        self.data_partitions = [_DataPartition(**d) for d in view["data"]]
         if now is not None:
             self._last_sync_us = op.now_us      # the reply's arrival time
+        if not view.get("unchanged"):
+            self._install_view(view)
         return True
+
+    def _install_view(self, view: Dict[str, Any]) -> None:
+        """Swap in a fresh partition table (sorted by range start for the
+        bisect router) and reconcile per-partition client state with any
+        range changes a split made underneath us."""
+        old = {mp.pid: mp for mp in self.meta_partitions}
+        mps = sorted((_MetaPartition(**m) for m in view["meta"]),
+                     key=lambda m: m.start)
+        self.meta_partitions = mps
+        self._mp_starts = [m.start for m in mps]
+        self.data_partitions = [_DataPartition(**d) for d in view["data"]]
+        self.routing_epoch = view.get("epoch", self.routing_epoch)
+        new_pids = {m.pid: m for m in mps}
+        for m in mps:
+            prev = old.get(m.pid)
+            if prev is None or m.end >= prev.end:
+                continue
+            # a split shrank this partition's range: remember which old pid
+            # covered each split-created sibling so the first dependent
+            # mutation routed there drains the old journal window first
+            for q in mps:
+                if q.pid not in old and prev.start <= q.start <= prev.end:
+                    self._rehomed_from.setdefault(q.pid, m.pid)
+        for pid in old:
+            if pid not in new_pids:
+                # partition left the table (manual migration/teardown):
+                # settle its async window and drop its routing caches
+                self.drain_meta_window(pid)
+                self.leader_cache.pop(f"mp{pid}", None)
+                self.read_affinity.pop(f"mp{pid}", None)
 
     def _next_seq(self) -> int:
         self._seq += 1
         return self._seq
 
     # --------------------------------------------------------- meta routing
-    def _mp_for_inode(self, ino: int) -> _MetaPartition:
-        for mp in self.meta_partitions:
+    def _mp_lookup(self, ino: int) -> Optional[_MetaPartition]:
+        """Bisect the start-sorted table: rightmost partition whose range
+        starts at or before ``ino`` is the only possible cover (ranges are
+        disjoint) — O(log n) once auto-split yields hundreds of entries."""
+        i = bisect.bisect_right(self._mp_starts, ino) - 1
+        if i >= 0:
+            mp = self.meta_partitions[i]
             if mp.start <= ino <= mp.end:
                 return mp
-        if self.sync_partitions():      # miss: resync (rate-limited)
-            for mp in self.meta_partitions:
-                if mp.start <= ino <= mp.end:
-                    return mp
-        raise NotFound(f"no meta partition covers inode {ino}")
+        return None
+
+    def _mp_for_inode(self, ino: int) -> _MetaPartition:
+        mp = self._mp_lookup(ino)
+        if mp is None and self.sync_partitions():   # miss: resync (rate-limited)
+            mp = self._mp_lookup(ino)
+        if mp is None:
+            raise NotFound(f"no meta partition covers inode {ino}")
+        return mp
 
     def _writable_mps(self) -> List[_MetaPartition]:
         return [mp for mp in self.meta_partitions if mp.status == "rw"]
 
     def _meta_propose(self, mp: _MetaPartition, payload: Any,
                       seq: Optional[int] = None) -> Any:
+        """Mutating op with split-aware routing: a ``WrongRange`` NAK from a
+        range-cut partition is followed exactly once — one epoch-gated table
+        resync (at most one RM exchange per client per cut, regardless of
+        how many procs race the split), one re-route.  A second WrongRange
+        is a real routing fault and surfaces as NotFound."""
+        seq = self._next_seq() if seq is None else seq
+        self._rehome_barrier(mp.pid)
+        try:
+            return self._meta_propose_once(mp, payload, seq)
+        except WrongRange as e:
+            route = _route_of(payload)
+            if route is None:
+                raise FsError(f"unroutable payload after range cut: "
+                              f"{payload[0]}") from e
+            self.stats["wrong_range_redirects"] += 1
+            # the misrouted mutation may depend on acked-but-uncommitted
+            # mutations parked on the shrunk partition's journal — settle
+            # them before re-homing (cross-partition barrier discipline)
+            self.drain_meta_window(mp.pid)
+            self.sync_partitions(min_epoch=e.epoch)
+            mp2 = self._mp_lookup(route)
+            if mp2 is None or mp2.pid == mp.pid:
+                raise NotFound(
+                    f"no meta partition covers inode {route}") from e
+            self._rehome_barrier(mp2.pid)
+            return self._meta_propose_once(mp2, payload, seq)
+
+    def _rehome_barrier(self, pid: int) -> None:
+        """One-time drain of the old partition's async journal window before
+        the FIRST mutation routed to the split-created sibling covering its
+        former range (later cross-partition dependencies are handled by the
+        explicit drains in create/link/unlink/rename/meta_batch)."""
+        src = self._rehomed_from.pop(pid, None)
+        if src is not None and src != pid:
+            self.drain_meta_window(src)
+
+    def _meta_propose_once(self, mp: _MetaPartition, payload: Any,
+                           seq: int) -> Any:
         """Mutating op through the partition's raft leader, with leader cache
         + retry.  Session (client_id, seq) deduplicates retries.
 
@@ -320,7 +456,6 @@ class CfsClient:
         oldest in-flight EARLY ack; durability barriers
         (:meth:`drain_meta_window`) wait on the background-commit
         high-water instead."""
-        seq = self._next_seq() if seq is None else seq
         gid = f"mp{mp.pid}"
         order = self._replica_order(gid, mp.replicas)
         last_err: Exception = NotFound(gid)
@@ -385,6 +520,11 @@ class CfsClient:
                     # for the mutating client)
                     self.session.note_mutation(payload, res)
                     return res
+                except WrongRange:
+                    if sub is not None:
+                        # the NAK is a full round trip on the client clock
+                        op.advance_to(sub.now_us)
+                    raise
                 except NotLeader as e:
                     last_err = e
                     if sub is not None:
@@ -405,6 +545,27 @@ class CfsClient:
 
     def _meta_read(self, mp: _MetaPartition, op: str, *args: Any,
                    method: str = "read", reply_bytes: int = 64) -> Any:
+        """Routed read with the same one-shot WrongRange redirect as
+        :meth:`_meta_propose` — a stale table never turns into a stale
+        serve or a spurious ENOENT for an inode the split re-homed."""
+        try:
+            return self._meta_read_once(mp, op, *args, method=method,
+                                        reply_bytes=reply_bytes)
+        except WrongRange as e:
+            route = _read_route_of(op, args)
+            if route is None:
+                raise
+            self.stats["wrong_range_redirects"] += 1
+            self.sync_partitions(min_epoch=e.epoch)
+            mp2 = self._mp_lookup(route)
+            if mp2 is None or mp2.pid == mp.pid:
+                raise NotFound(
+                    f"no meta partition covers inode {route}") from e
+            return self._meta_read_once(mp2, op, *args, method=method,
+                                        reply_bytes=reply_bytes)
+
+    def _meta_read_once(self, mp: _MetaPartition, op: str, *args: Any,
+                        method: str = "read", reply_bytes: int = 64) -> Any:
         """Leader-local read with replica failover.  ``method="read_leased"``
         returns the session envelope (value + partition mvcc + TTL grant);
         ``reply_bytes`` sizes the reply on the wire — ``stat_version``

@@ -129,6 +129,13 @@ class CfsCluster:
         except Exception:
             pass
 
+    def control_tick(self) -> None:
+        """One TIMED control-plane round (heartbeats over simnet + the
+        Algorithm-1 split check) under the caller's op — the event-driven
+        counterpart of :meth:`tick` for benchmark timelines.  Arm it
+        periodically at ``rm.hb_period_us`` (knob ``CFS_META_HB_US``)."""
+        self.rm.control_tick()
+
     def run_background_tasks(self) -> int:
         """Punch-hole workers etc.  Returns bytes freed."""
         return sum(n.background_tasks() for n in self.data_nodes.values()

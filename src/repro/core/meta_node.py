@@ -45,7 +45,7 @@ from .simnet import Network
 from .types import MAX_UINT64, Dentry, Inode, InodeFlag, InodeType
 
 __all__ = ["MetaNode", "MetaPartitionSM", "MetaError", "NoSuchInode",
-           "NoSuchDentry", "DentryExists"]
+           "NoSuchDentry", "DentryExists", "WrongRange"]
 
 # rough per-entry memory cost used for utilization-based placement
 INODE_MEM_BYTES = 300
@@ -83,15 +83,35 @@ class PartitionFull(MetaError):
     """Entry-count threshold reached: no NEW files, mutations still allowed."""
 
 
+class WrongRange(MetaError):
+    """Op routed to a partition whose (possibly split-shrunk) inode range
+    does not cover it.  Carries the routing epoch of the range cut so the
+    client can fetch a partition table at least that new and re-route
+    exactly once — a stale route is a redirect, never a silent serve or a
+    spurious ENOENT."""
+
+    def __init__(self, partition_id: int, ino: int, epoch: int):
+        super().__init__(
+            f"inode {ino} outside partition {partition_id} (epoch {epoch})")
+        self.partition_id = partition_id
+        self.ino = ino
+        self.epoch = epoch
+
+
 class MetaPartitionSM(StateMachine):
     """Replicated state machine of one meta partition."""
 
     def __init__(self, partition_id: int, volume: str,
-                 start: int, end: int, max_entries: int = 1 << 20):
+                 start: int, end: int, max_entries: int = 1 << 20,
+                 route_epoch: int = 0):
         self.partition_id = partition_id
         self.volume = volume
         self.start = start
         self.end = end                      # MAX_UINT64 until split cuts it
+        # RM routing epoch as of the last range change this partition
+        # learned about; advertised in WrongRange hints so clients know how
+        # fresh a table they must fetch before re-routing
+        self.route_epoch = route_epoch
         self.cursor = start - 1             # last allocated inode id
         self.inode_tree = BTree()
         self.dentry_tree = BTree()
@@ -118,6 +138,47 @@ class MetaPartitionSM(StateMachine):
 
     def writable(self) -> bool:
         return self.entries < self.max_entries and self.cursor < self.end
+
+    # ---- range enforcement (split-aware routing, PR 8) -----------------------
+    # arg index of the routing inode per op; ops not listed (create_inode
+    # allocates from the partition's own cursor, set_end is the RM task)
+    # are never misrouted by a stale table
+    MUT_ROUTE = {"create_dentry": 0, "delete_dentry": 0, "link_inc": 0,
+                 "unlink_dec": 0, "evict": 0, "update_extents": 0}
+    READ_ROUTE = {"lookup": 0, "get_inode": 0, "read_dir": 0}
+
+    def _covers(self, ino: Any) -> bool:
+        # non-int routing args are intra-batch ("ref", i, field) tokens:
+        # they resolve to inodes this partition just allocated
+        return not isinstance(ino, int) or self.start <= ino <= self.end
+
+    def check_route(self, payload: Tuple) -> None:
+        """Reject a mutation routed here by a pre-split table with a
+        WrongRange hint instead of silently serving (or raising a spurious
+        NoSuchInode for an inode that lives on the sibling)."""
+        op, args = payload[0], payload[1:]
+        if op == "batch":
+            for sub in args[0]:
+                self.check_route(sub)
+            return
+        idx = self.MUT_ROUTE.get(op)
+        if idx is not None and not self._covers(args[idx]):
+            raise WrongRange(self.partition_id, args[idx], self.route_epoch)
+
+    def check_read_route(self, op: str, args: Tuple) -> None:
+        """Same rejection for routed reads.  ``batch_inode_get`` is exempt:
+        it is a best-effort bulk read that already skips unknown inodes, so
+        the client refetches misses individually (and THAT read gets the
+        WrongRange redirect)."""
+        key: Any = None
+        idx = self.READ_ROUTE.get(op)
+        if idx is not None:
+            key = args[idx]
+        elif op == "stat_version":
+            kind, k = args[0], args[1]
+            key = k if kind == "inode" else tuple(k)[0]
+        if key is not None and not self._covers(key):
+            raise WrongRange(self.partition_id, key, self.route_epoch)
 
     # ---- raft apply ----------------------------------------------------------
     # ops that advance the partition mvcc; "batch" bumps through its sub-ops
@@ -230,9 +291,13 @@ class MetaPartitionSM(StateMachine):
         self.dentry_tree.delete(key)
         return _dentry_view(d)
 
-    def _ap_set_end(self, end: int) -> int:
-        """Algorithm 1 step: cut off the inode range at ``end``."""
+    def _ap_set_end(self, end: int, epoch: int = 0) -> int:
+        """Algorithm 1 step: cut off the inode range at ``end``.  The RM's
+        routing epoch at cut time rides along so out-of-range rejections
+        can hint a table version that already routes the sibling."""
         self.end = end
+        if epoch > self.route_epoch:
+            self.route_epoch = epoch
         return end
 
     # -- batched mutations (λFS/AsyncFS-style coalescing) ----------------------
@@ -341,6 +406,7 @@ class MetaPartitionSM(StateMachine):
             "vol": self.volume,
             "start": self.start,
             "end": self.end,
+            "route_epoch": self.route_epoch,
             "cursor": self.cursor,
             "mvcc": self.mvcc,
             "free": list(self.free_list),
@@ -362,6 +428,7 @@ class MetaPartitionSM(StateMachine):
         self.volume = snap["vol"]
         self.start = snap["start"]
         self.end = snap["end"]
+        self.route_epoch = snap.get("route_epoch", 0)
         self.cursor = snap["cursor"]
         self.mvcc = snap["mvcc"]
         if _san.SAN is not None:
@@ -429,8 +496,10 @@ class MetaNode:
     # ---- partition lifecycle ---------------------------------------------------
     def add_partition(self, partition_id: int, volume: str, start: int,
                       end: int, replicas: List[str],
-                      max_entries: int = 1 << 20) -> MetaPartitionSM:
-        sm = MetaPartitionSM(partition_id, volume, start, end, max_entries)
+                      max_entries: int = 1 << 20,
+                      route_epoch: int = 0) -> MetaPartitionSM:
+        sm = MetaPartitionSM(partition_id, volume, start, end, max_entries,
+                             route_epoch)
         self.partitions[partition_id] = sm
         self.raft_members[partition_id] = self.raft_host.add_group(
             f"mp{partition_id}", replicas, sm)
@@ -447,6 +516,7 @@ class MetaNode:
                 client_id: str = "", seq: int = -1) -> Any:
         """Write op: goes through the partition's raft group.  Charges the
         (batched) raft log append on every replica (§2.1.3 snapshots+logs)."""
+        self.partitions[partition_id].check_route(payload)
         member = self.raft_members[partition_id]
         # server-side executor the client funnel RPCs into
         result = member.propose(payload, client_id=client_id, seq=seq)  # lint: allow[direct-propose]
@@ -473,6 +543,9 @@ class MetaNode:
         ack path; only durability (replication to followers) rides the
         background clock.  A dedup-hit replay is already durable, so its
         ``commit_us`` collapses to the ack time."""
+        # range check before the leader check: every replica knows the cut,
+        # so a misroute NAKs in one round instead of a NotLeader dance first
+        self.partitions[partition_id].check_route(payload)
         member = self.raft_members[partition_id]
         if member.role != "leader":
             raise NotLeader(member.leader_id)
@@ -503,6 +576,7 @@ class MetaNode:
         """Read op: served from the leader's in-memory state (sequential
         consistency; no quorum read — the paper's relaxed semantics)."""
         sm = self.partitions[partition_id]
+        sm.check_read_route(op, args)
         return getattr(sm, op)(*args)
 
     def read_leased(self, partition_id: int, op: str, *args: Any) -> Dict:
@@ -511,7 +585,8 @@ class MetaNode:
         NoSuchDentry) propagate unleased — the client stamps its negative
         entries with its own (shorter) negative TTL."""
         sm = self.partitions[partition_id]
-        return {"v": getattr(sm, op)(*args),
+        sm.check_read_route(op, args)
+        return {"v": getattr(sm, op)(*args), "pid": sm.partition_id,
                 "mvcc": sm.mvcc, "lease_us": sm.lease_us}
 
     # ---- reporting -----------------------------------------------------------------
@@ -531,6 +606,7 @@ class MetaNode:
                 pid: {
                     "entries": p.entries,
                     "inodes": len(p.inode_tree),
+                    "mem_bytes": p.mem_bytes(),
                     "max_entries": p.max_entries,
                     "max_inode_id": p.max_inode_id,
                     "end": p.end,

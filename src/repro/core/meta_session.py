@@ -114,9 +114,11 @@ class MetaSession:
     def _check_env(self, mp: Any, env: Dict) -> Dict:
         """Async-commit invariant on every leased envelope: a timed read
         must never observe a partition mvcc the journal has not yet
-        assigned (the ordering substrate read-your-writes rides on)."""
+        assigned (the ordering substrate read-your-writes rides on).  The
+        envelope names the partition that actually served it — after a
+        WrongRange redirect that is the split sibling, not ``mp``."""
         if _san.SAN is not None:
-            _san.SAN.check_mvcc_read(mp.pid, env["mvcc"],
+            _san.SAN.check_mvcc_read(env.get("pid", mp.pid), env["mvcc"],
                                      self.client.net.current_op)
         return env
 
@@ -346,6 +348,20 @@ class MetaSession:
                     cl.inode_cache[iv["inode"]] = iv
                     self._imeta.pop(iv["inode"], None)
                     out[iv["inode"]] = iv
+        for ino in missing:
+            if ino in out:
+                continue
+            # a batch miss can be a stale ROUTE, not a vanished inode: the
+            # dentry may point at an inode a split re-homed onto a sibling
+            # our cached table does not know yet.  batch_inode_get is
+            # best-effort (it never raises WrongRange), so refetch the miss
+            # individually — get_inode carries the redirect; a genuinely
+            # vanished inode stays absent (attr None, seed semantics).
+            from .client import NotFound      # deferred: client imports us
+            try:
+                out[ino] = self.getattr(ino)
+            except (NotFound, NoSuchInode):
+                pass
         return [{**d, "attr": out.get(d["inode"])} for d in dentries]
 
     # ----------------------------------------------------------- bookkeeping

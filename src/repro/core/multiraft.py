@@ -199,12 +199,26 @@ class RaftCluster:
                 host.tick()
 
     def elect(self, group_id: str, preferred: Optional[str] = None, max_ticks: int = 200) -> str:
-        """Step ticks until the group has a leader; returns its node id."""
+        """Step ticks until the group has a leader; returns its node id.
+
+        Groups created mid-run by the RM's timed split task cannot rely on
+        driver ticks, so before falling back to the tick loop (which steps
+        EVERY host's clock) each live member of the group gets one direct
+        election attempt — a reachable quorum elects synchronously."""
         if preferred is not None:
             m = self.registry[preferred].groups[group_id]
             m.start_election()
             if m.role == Role.LEADER:
                 return preferred
+        for nid in sorted(self.registry):
+            if nid == preferred or nid in self.net.dead_nodes:
+                continue
+            m = self.registry[nid].groups.get(group_id)
+            if m is None:
+                continue
+            m.start_election()
+            if m.role == Role.LEADER:
+                return nid
         for _ in range(max_ticks):
             leader = self.leader_of(group_id)
             if leader is not None:

@@ -23,6 +23,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
+from ..analysis import knobs
 from .multiraft import MultiRaftHost, RaftCluster
 from .raft import NotLeader, StateMachine
 from .simnet import NetError, Network
@@ -30,9 +31,9 @@ from .types import MAX_UINT64
 
 __all__ = ["ResourceManager", "RMStateMachine", "SPLIT_DELTA"]
 
-SPLIT_DELTA = 1 << 16      # Algorithm 1's Δ: headroom beyond maxInodeID
+SPLIT_DELTA = knobs.get_int("CFS_META_SPLIT_DELTA")  # Algorithm 1's Δ
 MIN_WRITABLE_DATA = 2      # auto-expand a volume below this many writable DPs
-META_SPLIT_FRACTION = 0.8  # split when entries exceed this fraction of max
+META_SPLIT_FRACTION = knobs.get_float("CFS_META_SPLIT_FRACTION")
 
 
 @dataclass
@@ -54,9 +55,15 @@ class RMStateMachine(StateMachine):
         self.volumes: Dict[str, Dict[str, List[int]]] = {}
         self.partitions: Dict[int, PartitionInfo] = {}
         self.next_partition_id = 1
+        # monotonic routing epoch: bumped on every applied hard-state change,
+        # so it advances identically on every replica and survives failover.
+        # Clients key their partition tables by it and `client_view` can
+        # answer "unchanged" without re-serializing the tables.
+        self.epoch = 0
 
     def apply(self, payload: Any) -> Any:
         op, args = payload[0], payload[1:]
+        self.epoch += 1
         return getattr(self, "_ap_" + op)(*args)
 
     def _ap_register_node(self, node_id: str, kind: str, zone: str) -> bool:
@@ -103,6 +110,7 @@ class RMStateMachine(StateMachine):
                 for pid, p in self.partitions.items()
             },
             "next_pid": self.next_partition_id,
+            "epoch": self.epoch,
         }
 
     def restore(self, snap: Any) -> None:
@@ -115,6 +123,7 @@ class RMStateMachine(StateMachine):
             in snap["partitions"].items()
         }
         self.next_partition_id = snap["next_pid"]
+        self.epoch = snap.get("epoch", 0)
 
 
 class ResourceManager:
@@ -146,6 +155,13 @@ class ResourceManager:
         self.soft_partition_meta: Dict[int, Dict[str, Any]] = {}
         self.soft_last_hb: Dict[str, float] = {}
         self._seq = 0
+        # elastic control plane (PR 8): the periodic timed control round
+        # (heartbeats + Algorithm-1 split check) is knob-gated; every
+        # executed split is logged for the expansion benchmark's timeline
+        self.autosplit = knobs.get_bool("CFS_META_AUTOSPLIT")
+        self.split_fraction = META_SPLIT_FRACTION
+        self.hb_period_us = knobs.get_float("CFS_META_HB_US")
+        self.split_log: List[Dict[str, Any]] = []
 
     # ---- leadership ------------------------------------------------------------
     def leader_id(self) -> str:
@@ -208,10 +224,33 @@ class ResourceManager:
             chosen = [nid for _, nid in candidates[:n_replicas]]
         # allocation-aware projection: bump the estimated utilization so a
         # burst of placements spreads instead of stacking on the same nodes
-        # before the next heartbeat refreshes the real numbers
+        # before the next heartbeat refreshes the real numbers.  The bump is
+        # the projected memory footprint of the new partition relative to
+        # each node's capacity (mean of the observed per-partition sizes);
+        # without any heartbeat data yet it falls back to a flat 1% of
+        # capacity, the pre-PR-8 constant.
         for nid in chosen:
-            self.soft_util[nid] = self.soft_util.get(nid, 0.0) + 0.01
+            self.soft_util[nid] = min(
+                1.0, self.soft_util.get(nid, 0.0)
+                + self._projected_bump(nid, kind))
         return chosen
+
+    def _projected_bump(self, nid: str, kind: str) -> float:
+        """Estimated utilization delta of placing one new ``kind`` partition
+        replica on ``nid`` (soft-state projection, refined by heartbeats)."""
+        node = self.directory.get(nid)
+        if kind == "meta":
+            cap = getattr(node, "mem_capacity", 0)
+        else:
+            cap = node.disk.capacity if node is not None \
+                and hasattr(node, "disk") else 0
+        if not cap:
+            return 0.01
+        sizes = [info["mem_bytes"]
+                 for info in self.soft_partition_meta.values()
+                 if kind == "meta" and "mem_bytes" in info]
+        proj = (sum(sizes) / len(sizes)) if sizes else 0.01 * cap
+        return min(1.0, proj / cap)
 
     # ---- volumes ---------------------------------------------------------------------
     def create_volume(self, name: str, n_meta: int = 3, n_data: int = 10,
@@ -235,11 +274,12 @@ class ResourceManager:
                             replicas: int) -> int:
         nodes = self._pick_nodes("meta", replicas)
         pid = self._propose(("add_partition", volume, "meta", nodes, start, end))
+        epoch = self.leader_sm().epoch
         for nid in nodes:
             self.net.call(self.leader_id(), nid,
                           self.directory[nid].add_partition,
                           pid, volume, start, end, nodes,
-                          self.meta_max_entries, kind="rm.task")
+                          self.meta_max_entries, epoch, kind="rm.task")
         self.rc.elect(f"mp{pid}", preferred=nodes[0])
         return pid
 
@@ -255,11 +295,19 @@ class ResourceManager:
         return pid
 
     # ---- client API (non-persistent connections, §2.5.2) --------------------------------
-    def client_view(self, volume: str) -> Dict[str, Any]:
-        """Everything a client caches at mount: partition routing tables."""
+    def client_view(self, volume: str,
+                    known_epoch: int = -1) -> Dict[str, Any]:
+        """Everything a client caches at mount: partition routing tables.
+
+        ``known_epoch`` is the routing epoch of the caller's cached table;
+        when it matches the current epoch the reply is just
+        ``{"epoch", "unchanged": True}`` — the fast path that makes routine
+        resyncs O(1) once auto-splits yield hundreds of partitions."""
         sm = self.leader_sm()
         if volume not in sm.volumes:
             raise KeyError(volume)
+        if known_epoch == sm.epoch:
+            return {"epoch": sm.epoch, "unchanged": True}
         meta, data = [], []
         for pid in sm.volumes[volume]["meta"]:
             p = sm.partitions[pid]
@@ -269,7 +317,7 @@ class ResourceManager:
             p = sm.partitions[pid]
             data.append({"pid": pid, "replicas": list(p.replicas),
                          "status": p.status})
-        return {"meta": meta, "data": data}
+        return {"epoch": sm.epoch, "meta": meta, "data": data}
 
     def statfs(self, volume: str) -> Dict[str, int]:
         """Volume-level statvfs: capacity from the registered data nodes'
@@ -300,6 +348,9 @@ class ResourceManager:
     def maybe_split_meta_partition(self, volume: str) -> Optional[int]:
         """Inspect the volume's max-id meta partition; split if near-full.
         Returns the new partition id, or None."""
+        if not self.autosplit:
+            return None
+        self._finish_pending_splits(volume)
         sm = self.leader_sm()
         meta_pids = sm.volumes[volume]["meta"]
         if not meta_pids:
@@ -308,7 +359,7 @@ class ResourceManager:
         info = self.soft_partition_meta.get(max_pid)
         if info is None:
             return None
-        if info["entries"] < META_SPLIT_FRACTION * info["max_entries"]:
+        if info["entries"] < self.split_fraction * info["max_entries"]:
             return None
         return self.split_meta_partition(volume, max_pid,
                                          max_inode_id=info["max_inode_id"])
@@ -324,18 +375,94 @@ class ResourceManager:
         if mp.end == MAX_UINT64:            # line 7
             end = max_inode_id + SPLIT_DELTA   # line 8: cut off the inode range
             self._propose(("set_partition_end", pid, end))   # line 13 (update)
+            # line 14: create the sibling over [end+1, ∞) BEFORE pushing the
+            # cut to the old partition, so the epoch it advertises in
+            # WrongRange hints names a table that already routes the sibling
+            new_pid = self._add_meta_partition(volume, end + 1, MAX_UINT64, 3)
             # line 11-12: sync with the meta node (the split task)
-            for nid in mp.replicas:
-                try:
-                    self.net.call(self.leader_id(), nid,
-                                  self.directory[nid].propose,  # lint: allow[direct-propose]
-                                  pid, ("set_end", end), kind="rm.task")
-                    break   # proposing once through the partition leader suffices
-                except (NetError, NotLeader):
-                    continue
-            # line 14: create the sibling over [end+1, ∞)
-            return self._add_meta_partition(volume, end + 1, MAX_UINT64, 3)
+            self._push_set_end(pid, mp.replicas, end, self.leader_sm().epoch)
+            op = self.net.current_op
+            self.split_log.append({
+                "t_us": round(op.now_us, 3)
+                        if op is not None and op.timed else 0.0,
+                "volume": volume, "pid": pid, "new_pid": new_pid,
+                "cut": end, "epoch": self.leader_sm().epoch,
+                "files": sum(self.soft_partition_meta.get(p, {})
+                             .get("inodes", 0)
+                             for p in sm.volumes[volume]["meta"]),
+            })
+            return new_pid
         return -1
+
+    def _push_set_end(self, pid: int, replicas: List[str], end: int,
+                      epoch: int) -> bool:
+        """Push the range cut to the live partition as an RM task; the
+        epoch rides along so WrongRange hints can name a fresh table."""
+        for nid in replicas:
+            try:
+                self.net.call(self.leader_id(), nid,
+                              self.directory[nid].propose,  # lint: allow[direct-propose]
+                              pid, ("set_end", end, epoch), kind="rm.task")
+                return True  # proposing once through the partition leader suffices
+            except (NetError, NotLeader):
+                continue
+        return False
+
+    def _finish_pending_splits(self, volume: str) -> None:
+        """Crash-mid-split recovery: a split is three replicated steps (cut
+        the RM range, create the sibling, push the cut to the partition).
+        A leader crash between them leaves hard state that a later control
+        round detects here and finishes idempotently."""
+        sm = self.leader_sm()
+        meta_pids = list(sm.volumes[volume]["meta"])
+        if not meta_pids:
+            return
+        mp = sm.partitions[max(meta_pids)]
+        if mp.end != MAX_UINT64:
+            # crashed after the cut, before the sibling: the range cover has
+            # a gap at [end+1, ∞) — create the missing sibling now
+            self._add_meta_partition(volume, mp.end + 1, MAX_UINT64, 3)
+        # re-push the cut to any partition whose live SM still serves a
+        # wider range than the hard state records (idempotent)
+        for pid in meta_pids:
+            p = sm.partitions[pid]
+            if p.end == MAX_UINT64:
+                continue
+            for nid in p.replicas:
+                node = self.directory.get(nid)
+                if (node is not None and nid not in self.net.dead_nodes
+                        and pid in getattr(node, "partitions", {})
+                        and node.partitions[pid].end != p.end):
+                    self._push_set_end(pid, p.replicas, p.end, sm.epoch)
+                    break
+
+    # ---- periodic timed control round (PR 8) ---------------------------------------------
+    def control_tick(self) -> None:
+        """One timed control-plane round: every live node pushes its
+        heartbeat to the RM leader over simnet (concurrent branches under
+        the caller's op), then the leader runs the Algorithm-1 split check
+        per volume as a timed task.  Benchmarks arm this periodically
+        (``hb_period_us``); the untimed driver path stays
+        ``CfsCluster.tick``."""
+        leader = self.leader_id()
+        op = self.net.current_op
+        fork = op.fork() if op is not None and op.timed else None
+        now = op.now_us if op is not None else 0.0
+        for nid in sorted(self.directory):
+            if nid in self.net.dead_nodes:
+                continue
+            payload = self.directory[nid].heartbeat_payload()
+            try:
+                self.net.call(nid, leader, self.heartbeat, payload, now,
+                              kind="rm.hb")
+            except NetError:
+                pass
+            if fork is not None:
+                fork.branch_done()
+        if fork is not None:
+            fork.join()
+        for vol in sorted(self.leader_sm().volumes):
+            self.maybe_split_meta_partition(vol)
 
     # ---- volume auto-expansion (§2.3.1 second para) -------------------------------------------
     def check_volumes(self) -> List[int]:

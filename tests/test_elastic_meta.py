@@ -1,0 +1,345 @@
+"""Elastic metadata control plane (PR 8): routing epochs, timed
+auto-split, WrongRange re-routing, split-aware client state migration,
+and fsck's partition-range invariants."""
+
+import pytest
+
+from repro.core import CfsCluster
+from repro.core.fsck import fsck
+from repro.core.meta_node import WrongRange
+from repro.core.resource_manager import SPLIT_DELTA
+from repro.core.types import MAX_UINT64
+
+
+def make(meta_max_entries=1 << 20, n_meta_partitions=1, **kw):
+    c = CfsCluster(n_meta=4, n_data=4, extent_max_size=1024 * 1024,
+                   meta_max_entries=meta_max_entries, seed=7, **kw)
+    c.create_volume("v", n_meta_partitions=n_meta_partitions,
+                    n_data_partitions=3)
+    return c
+
+
+def timed_control_tick(c, at):
+    op = c.net.begin_op(at=at)
+    try:
+        c.control_tick()
+    finally:
+        c.net.end_op()
+    return op
+
+
+def force_split(c, volume="v"):
+    """One deterministic Algorithm-1 split of the max-id partition."""
+    sm = c.rm.leader_sm()
+    pid = max(sm.volumes[volume]["meta"])
+    leader = c.rc.leader_of(f"mp{pid}") or sm.partitions[pid].replicas[0]
+    part = c.meta_nodes[leader].partitions[pid]
+    new_pid = c.rm.split_meta_partition(volume, pid,
+                                        max_inode_id=part.max_inode_id)
+    assert new_pid > 0
+    return pid, new_pid
+
+
+# ---- routing epoch --------------------------------------------------------
+def test_epoch_bumps_on_every_hard_state_change():
+    c = make()
+    e0 = c.rm.leader_sm().epoch
+    assert e0 > 0                      # volume + partition creation bumped it
+    c.rm.create_volume("v2", n_meta=1, n_data=1)
+    assert c.rm.leader_sm().epoch > e0
+
+
+def test_client_view_fast_paths_on_epoch_match():
+    c = make()
+    view = c.rm.client_view("v")
+    assert view["epoch"] == c.rm.leader_sm().epoch
+    again = c.rm.client_view("v", known_epoch=view["epoch"])
+    assert again == {"epoch": view["epoch"], "unchanged": True}
+    # a stale epoch gets the full table
+    full = c.rm.client_view("v", known_epoch=view["epoch"] - 1)
+    assert "meta" in full and "data" in full
+
+
+def test_epoch_survives_rm_snapshot_restore():
+    c = make()
+    e = c.rm.leader_sm().epoch
+    snap = c.rm.leader_sm().snapshot()
+    c.rm.leader_sm().restore(snap)
+    assert c.rm.leader_sm().epoch == e
+
+
+def test_sync_partitions_min_epoch_bypasses_sync_window():
+    """The redirect path's resync must not be suppressed by the client's
+    CFS_SYNC_WINDOW_US rate limit — a WrongRange hint is proof the table
+    is stale NOW."""
+    c = make()
+    m = c.mount("v")
+    m.client.sync_partitions(force=True)
+    e = m.client.routing_epoch
+    c.rm.create_volume("vv", n_meta=1, n_data=1)     # bump the epoch
+    op = c.net.begin_op(at=0.0)
+    try:
+        m.client._last_sync_us = op.now_us           # window freshly stamped
+        before = m.client.stats["rm_calls"]
+        m.client.sync_partitions(min_epoch=e + 1)
+        assert m.client.stats["rm_calls"] == before + 1
+        # and an epoch the table already covers is a no-RPC no-op
+        m.client.sync_partitions(min_epoch=m.client.routing_epoch)
+        assert m.client.stats["rm_calls"] == before + 1
+    finally:
+        c.net.end_op()
+
+
+# ---- bisect routing (satellite 1) ----------------------------------------
+def test_mp_lookup_bisect_matches_linear_scan():
+    c = make(n_meta_partitions=1)
+    for _ in range(3):
+        force_split(c)
+    m = c.mount("v")
+    m.client.sync_partitions(force=True)
+    mps = m.client.meta_partitions
+    assert len(mps) == 4
+    probes = [1]
+    for mp in mps:
+        probes += [mp.start, mp.start + 1,
+                   min(mp.end, mp.start + 1234),
+                   mp.end if mp.end < MAX_UINT64 else mp.start + 10**9]
+    for ino in probes:
+        linear = next((p for p in mps if p.start <= ino <= p.end), None)
+        assert m.client._mp_lookup(ino) is linear, ino
+
+
+# ---- timed auto-split (tentpole, RM layer) --------------------------------
+def test_timed_control_tick_autosplits_near_full_partition():
+    c = make(meta_max_entries=24)
+    m = c.mount("v")
+    m.mkdir("/d")
+    t = 0.0
+    for i in range(40):
+        m.write_file(f"/d/f{i}", b"x" * 64)
+        if i % 5 == 4:
+            t += 1000.0
+            timed_control_tick(c, t)
+    assert len(c.rm.split_log) >= 2
+    for e in c.rm.split_log:
+        assert e["t_us"] > 0.0          # executed as a TIMED task
+        assert e["epoch"] > 0
+    assert fsck(c, "v").clean
+    # the storm's files survive the cuts, via whatever partition now
+    # serves them
+    m2 = c.mount("v")
+    for i in range(0, 40, 5):
+        assert m2.read_file(f"/d/f{i}") == b"x" * 64
+
+
+def test_split_sibling_prefers_newly_joined_meta_node():
+    c = make(meta_max_entries=24)
+    m = c.mount("v")
+    m.mkdir("/d")
+    for i in range(6):
+        m.write_file(f"/d/f{i}", b"x" * 64)
+    timed_control_tick(c, 500.0)        # heartbeats: old nodes report usage
+    new = c.add_meta_node()             # joins at utilization 0
+    _, new_pid = force_split(c)
+    sm = c.rm.leader_sm()
+    assert new.node_id in sm.partitions[new_pid].replicas
+
+
+def test_autosplit_knob_off_disables_the_control_loop():
+    c = make(meta_max_entries=24)
+    c.rm.autosplit = False
+    m = c.mount("v")
+    m.mkdir("/d")
+    for i in range(8):
+        m.write_file(f"/d/f{i}", b"x" * 64)
+    timed_control_tick(c, 1000.0)
+    assert c.rm.split_log == []
+    assert len(c.rm.leader_sm().volumes["v"]["meta"]) == 1
+
+
+# ---- proportional placement bump (satellite 2) ----------------------------
+def test_projected_bump_tracks_observed_partition_sizes():
+    c = make()
+    assert c.rm._projected_bump("m0", "meta") == pytest.approx(0.01)
+    cap = c.meta_nodes["m0"].mem_capacity
+    c.rm.soft_partition_meta[999] = {"mem_bytes": cap // 4}
+    c.rm.soft_partition_meta[998] = {"mem_bytes": cap // 2}
+    assert c.rm._projected_bump("m0", "meta") == pytest.approx(3 / 8)
+    # data placements keep the flat heuristic (disk bytes are accounted
+    # at extent granularity elsewhere)
+    assert c.rm._projected_bump("d0", "data") == pytest.approx(0.01)
+
+
+# ---- WrongRange protocol (meta + client layers) ---------------------------
+def test_cut_partition_naks_out_of_range_ops_with_epoch():
+    c = make()
+    pid, new_pid = force_split(c)
+    sm = c.rm.leader_sm()
+    cut = sm.partitions[pid].end
+    leader = c.rc.leader_of(f"mp{pid}") or sm.partitions[pid].replicas[0]
+    node = c.meta_nodes[leader]
+    with pytest.raises(WrongRange) as ei:
+        node.propose(pid, ("link_inc", cut + 1))  # lint: allow[direct-propose]
+    assert ei.value.epoch >= sm.partitions[new_pid].epoch if hasattr(
+        sm.partitions[new_pid], "epoch") else ei.value.epoch > 0
+    with pytest.raises(WrongRange):
+        node.read(pid, "get_inode", cut + 1)
+    # in-range ops still served
+    assert node.read(pid, "get_inode", 1) is not None
+
+
+def test_stale_client_mutation_follows_hint_exactly_once():
+    c = make()
+    stale = c.mount("v")
+    stale.client.sync_partitions(force=True)
+    old_table = list(stale.client.meta_partitions)
+    assert len(old_table) == 1
+    pid, new_pid = force_split(c)
+    cut = c.rm.leader_sm().partitions[pid].end
+    # a FRESH client creates files until one's inode lands on the sibling
+    # (creates round-robin the writable partitions)
+    fresh = c.mount("v")
+    fresh.client.coalesce_meta = False   # Fig. 3 scatter: random partition
+    fresh.mkdir("/d")
+    far = None
+    for i in range(40):
+        fresh.write_file(f"/d/y{i}", b"y" * 32)
+        ino = fresh.path_inode(f"/d/y{i}")
+        if ino > cut:
+            far = ino
+            break
+    assert far is not None
+    # the stale client routes a mutation for it by its OLD table
+    rm_before = stale.client.stats["rm_calls"]
+    mp = stale.client._mp_for_inode(far)
+    assert mp.pid == pid                 # stale route
+    res = stale.client._meta_propose(mp, ("link_inc", far))
+    assert res is not None               # served by the sibling
+    assert stale.client.stats["wrong_range_redirects"] == 1
+    assert stale.client.stats["rm_calls"] == rm_before + 1   # ONE resync
+    assert stale.client.routing_epoch == c.rm.leader_sm().epoch
+    # undo + second mutation routes directly (no further redirect)
+    mp2 = stale.client._mp_for_inode(far)
+    assert mp2.pid == new_pid
+    stale.client._meta_propose(mp2, ("unlink_dec", far))
+    assert stale.client.stats["wrong_range_redirects"] == 1
+
+
+def test_stale_session_read_revalidates_across_the_cut():
+    c = make()
+    stale = c.mount("v")
+    stale.mkdir("/d")
+    stale.write_file("/d/near", b"n" * 16)
+    assert stale.read_file("/d/near") == b"n" * 16    # warm the session
+    pid, _ = force_split(c)
+    cut = c.rm.leader_sm().partitions[pid].end
+    fresh = c.mount("v")
+    fresh.client.coalesce_meta = False   # Fig. 3 scatter: random partition
+    far = None
+    for i in range(40):
+        fresh.write_file(f"/d/y{i}", b"f" * 48)
+        if fresh.path_inode(f"/d/y{i}") > cut:
+            far = f"/d/y{i}"
+            break
+    assert far is not None
+    # the stale mount resolves the NEW name through its pre-split session
+    # + table: lookup hits the parent (old partition), the inode read is
+    # re-routed to the sibling under the hood
+    assert stale.read_file(far) == b"f" * 48
+    assert stale.stat(far)["size"] == 48
+    assert stale.client.stats["wrong_range_redirects"] >= 1
+
+
+def test_rehomed_window_drains_before_first_sibling_mutation():
+    c = make()
+    m = c.mount("v")
+    m.client.meta_async = True
+    m.client.sync_partitions(force=True)
+    old_pid = m.client.meta_partitions[0].pid
+    op = c.net.begin_op(at=0.0)
+    try:
+        m.client._meta_propose(m.client.meta_partitions[0],
+                               ("create_inode", 1, b"", 0.0))
+        assert m.client._meta_unacked.get(old_pid)   # parked, unacked
+        _, new_pid = force_split(c)
+        m.client.sync_partitions(force=True)
+        assert m.client._rehomed_from.get(new_pid) == old_pid
+        barriers = m.client.stats["meta_barriers"]
+        sib = next(p for p in m.client.meta_partitions
+                   if p.pid == new_pid)
+        m.client._meta_propose(sib, ("create_inode", 1, b"", 0.0))
+        # the old window was settled BEFORE the sibling saw the mutation
+        assert not m.client._meta_unacked.get(old_pid)
+        assert m.client.stats["meta_barriers"] == barriers + 1
+        assert new_pid not in m.client._rehomed_from     # one-time
+    finally:
+        c.net.end_op()
+
+
+# ---- fsck range invariants (satellite 4) ----------------------------------
+def test_fsck_flags_range_gap_and_mismatch_then_control_loop_heals():
+    c = make()
+    sm = c.rm.leader_sm()
+    pid = max(sm.volumes["v"]["meta"])
+    leader = c.rc.leader_of(f"mp{pid}") or sm.partitions[pid].replicas[0]
+    cut = c.meta_nodes[leader].partitions[pid].max_inode_id + SPLIT_DELTA
+    # emulate an RM leader crash after step 1 of the split: the hard-state
+    # cut landed, the sibling was never created, the live SM never heard
+    c.rm._propose(("set_partition_end", pid, cut))
+    rep = fsck(c, "v")
+    assert not rep.clean
+    assert rep.range_gaps == [(cut + 1, MAX_UINT64)]
+    assert rep.range_mismatches == [pid]
+    # ... and the RM leader dies; the next control round on the NEW leader
+    # finishes the split from replicated hard state alone
+    old_leader = c.rm.leader_id()
+    c.kill_node(old_leader)
+    timed_control_tick(c, 1000.0)
+    c.revive_node(old_leader)
+    rep2 = fsck(c, "v")
+    assert rep2.clean, (rep2.range_gaps, rep2.range_mismatches)
+    sm = c.rm.leader_sm()
+    pids = sm.volumes["v"]["meta"]
+    assert len(pids) == 2
+    assert sm.partitions[max(pids)].start == cut + 1
+    assert sm.partitions[max(pids)].end == MAX_UINT64
+    # the cluster still takes writes across the healed cut
+    m = c.mount("v")
+    m.write_file("/ok", b"k")
+    assert m.read_file("/ok") == b"k"
+
+
+def test_fsck_detects_overlapping_ranges():
+    c = make(n_meta_partitions=2)
+    sm = c.rm.leader_sm()
+    lo_pid = min(sm.volumes["v"]["meta"])
+    hi_end = sm.partitions[lo_pid].end + 10
+    c.rm._propose(("set_partition_end", lo_pid, hi_end))
+    rep = fsck(c, "v")
+    assert rep.range_overlaps
+    assert not rep.range_gaps
+
+
+def test_split_preserves_all_data_and_fsck_stays_clean():
+    c = make(meta_max_entries=30)
+    m = c.mount("v")
+    m.mkdir("/d")
+    paths = {}
+    t = 0.0
+    for i in range(36):
+        data = bytes([i]) * (64 + i)
+        m.write_file(f"/d/f{i}", data)
+        paths[f"/d/f{i}"] = data
+        if i % 6 == 5:
+            t += 1500.0
+            timed_control_tick(c, t)
+    assert len(c.rm.split_log) >= 1
+    rep = fsck(c, "v")
+    assert rep.clean, rep
+    assert rep.misplaced_inodes == []
+    assert rep.unroutable_dentries == []
+    m2 = c.mount("v")
+    assert sorted(m2.readdir("/d")) == sorted(
+        p.split("/")[-1] for p in paths)
+    for p, data in paths.items():
+        assert m2.read_file(p) == data
