@@ -1,0 +1,82 @@
+"""Dataloader benchmark — training-input pipeline over the extent cache.
+
+The paper's motivating container workload for client-side data caching:
+N data-parallel worker processes random-read a SHARED small-file corpus
+(tokenized shards) through :mod:`repro.storage.datapipe`.  Every worker
+walks the same shard files in its own shuffled order, so the corpus is
+re-read many times per client — exactly the image/shared-lib/training-
+shard pattern the tiered cache targets.  ``ShardReader.batch_at`` reads
+whole shard files through the client's hedged read path, which consults
+the cache per packet; consecutive steps land in the same shard, so even
+the first epoch hits after its first touch.
+
+Rows: ``cfs`` (per-mount pinned cache budgets) vs ``cfs-nocache``
+(``data_cache = None`` — every batch refetches its shard over the
+network, the seed path).  Extras report tier hit/miss counts, hit rate,
+and occupancy.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.cache.extent_cache import TieredExtentCache
+from repro.storage.datapipe import ShardReader, ShardWriter
+
+from .common import BenchResult, run_streams
+from .mdtest import make_cfs
+
+TOKENS_PER_SHARD = 1 << 14          # 64 KB shards (int32): small-file path
+
+
+def run(out_rows: List[str], smoke: bool = False) -> List[dict]:
+    results: List[BenchResult] = []
+    clients = 2
+    procs = 2 if smoke else 4
+    n_shards = 8 if smoke else 32
+    steps = 8 if smoke else 48
+    for label, cached in (("cfs", True), ("cfs-nocache", False)):
+        cluster = make_cfs(4 if smoke else 10)
+        mounts = [cluster.mount("bench", client_id=f"c{i}")
+                  for i in range(clients)]
+        for m in mounts:
+            cl = m.client
+            cl.data_cache = TieredExtentCache(
+                cl.client_id, cluster.net, cl.volume,
+                16 << 20, 64 << 20) if cached else None
+        # shared corpus, written once by client 0 (untimed setup)
+        w = ShardWriter(mounts[0], base="/data",
+                        tokens_per_shard=TOKENS_PER_SHARD)
+        doc = list(range(997))
+        while True:
+            w.add_document(doc)
+            if w._n >= n_shards:
+                break
+        w.finish()
+
+        def stream(ci, pi):
+            # world=1 + per-rank seed: every worker walks the WHOLE corpus
+            # in its own shuffled order (shared working set, random access)
+            reader = ShardReader(mounts[ci], "/data", rank=0, world=1,
+                                 batch=4, seq_len=255,
+                                 seed=ci * procs + pi)
+            return [lambda s=s, r=reader: r.batch_at(s) for s in range(steps)]
+
+        caches = [m.client.data_cache for m in mounts
+                  if m.client.data_cache is not None]
+        r = run_streams(
+            "Dataloader", label, cluster.net,
+            [(mounts[ci].client.client_id, stream(ci, pi))
+             for ci in range(clients) for pi in range(procs)],
+            clients, procs)
+        if caches:
+            for key in ("ram_hits", "ssd_hits", "misses"):
+                r.extra[key] = sum(c.stats[key] for c in caches)
+            served = r.extra["ram_hits"] + r.extra["ssd_hits"]
+            r.extra["hit_rate"] = served / max(1, served + r.extra["misses"])
+            occ = [c.occupancy() for c in caches]
+            r.extra["ram_bytes"] = sum(o["ram_bytes"] for o in occ)
+            r.extra["ssd_bytes"] = sum(o["ssd_bytes"] for o in occ)
+        results.append(r)
+    out_rows.extend(r.row() for r in results)
+    return [r.json_obj() for r in results]

@@ -1,0 +1,241 @@
+"""HotSet benchmark — the tiered client extent cache (PR 9).
+
+Three working-set regimes, each a second sequential pass over a set the
+first pass just filled, against per-mount cache budgets pinned on the
+client instance (independent of the ``CFS_CACHE_*`` env defaults):
+
+* **HotSetRam**  — the set fits the RAM tier: pass 2 is served at memory
+  bandwidth (acceptance: ≥5x the cache-off IOPS at byte-identical data).
+* **HotSetSsd**  — the set spills the RAM tier but fits RAM+SSD: a cyclic
+  LRU scan turns pass 2 into SSD-tier hits queued on the ``ssd:<client>``
+  resource — strictly between the RAM row and cache-off.
+* **HotSetCold** — the set exceeds both tiers: every packet is evicted
+  before its revisit, pass 2 re-fetches over the network like cache-off.
+
+Each regime carries a ``cfs-nocache`` A/B row (``data_cache = None``, the
+seed read path) over an identical fresh cluster; rows report tier
+hit/miss deltas, occupancy, and a CRC of the pass-2 bytes so the A/B's
+byte-identical-contents acceptance is visible in the JSON itself.
+
+A contention A/B rides along (**HotSetContend**): one writer client
+version-stamps the head of a shared file (pwrite + fsync, an in-place
+raft overwrite, so the bytes change under unchanged extent keys) while
+reader clients pread it through the cache under a deliberately short
+lease TTL.  Readers decode the version they actually observed; the row
+reports the maximum observed staleness — bounded by one lease TTL, the
+same contract metadata serves under (``stale_max_us <= ttl_us``) — and
+the cache-off row shows the seed path reads fresh bytes at network cost.
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import Dict, List, Optional, Tuple
+
+from repro.cache.extent_cache import TieredExtentCache
+from repro.core import O_CREAT, O_RDONLY, O_RDWR, O_TRUNC, O_WRONLY, PACKET_SIZE
+
+from .common import BenchResult, run_streams
+from .mdtest import make_cfs, _cid
+
+IO = PACKET_SIZE                      # one cached packet per pread
+
+
+def _pin_cache(mounts, net, ram_mb: int, ssd_mb: int) -> None:
+    """Give every mount a fresh cache with pinned byte budgets (or none):
+    the rows must stay a true A/B even when CFS_CACHE_* env overrides are
+    set, mirroring how the pipeline/read A/Bs pin their depths."""
+    for m in mounts:
+        cl = m.client
+        if ram_mb or ssd_mb:
+            cl.data_cache = TieredExtentCache(
+                cl.client_id, net, cl.volume, ram_mb << 20, ssd_mb << 20)
+        else:
+            cl.data_cache = None
+
+
+def _prefill(mounts, files: Dict[Tuple[int, int], str], ws: int) -> None:
+    """Write every working-set file untimed (setup must not be measured);
+    content is offset-tagged so any misassembled read breaks the CRC."""
+    for (ci, pi), path in files.items():
+        mnt = mounts[ci]
+        fd = mnt.open(path, O_WRONLY | O_CREAT | O_TRUNC)
+        for off in range(0, ws, IO):
+            tag = (ci * 131 + pi * 17 + off // IO) % 251
+            mnt.pwrite(fd, bytes([tag]) * IO, off)
+        mnt.close(fd)
+
+
+def _scan_pass(name: str, label: str, net, mounts, files, ws: int,
+               clients: int, procs: int, crc_sink: Optional[List[int]] = None
+               ) -> BenchResult:
+    """One timed sequential pass: every proc preads its file in IO-sized
+    ops.  ``crc_sink`` collects a per-stream CRC of the returned bytes."""
+    def stream(ci, pi):
+        mnt = mounts[ci]
+        path = files[(ci, pi)]
+        state: Dict[str, int] = {}
+
+        def make(off):
+            def op():
+                if "fd" not in state:
+                    state["fd"] = mnt.open(path, O_RDONLY)
+                data = mnt.pread(state["fd"], IO, off)
+                if crc_sink is not None:
+                    state["crc"] = zlib.crc32(data, state.get("crc", 0))
+                if off + IO >= ws:
+                    mnt.close(state["fd"])
+                    del state["fd"]
+                    if crc_sink is not None:
+                        crc_sink.append(state["crc"])
+            return op
+        return [make(off) for off in range(0, ws, IO)]
+
+    return run_streams(
+        name, label, net,
+        [(_cid(mounts[ci]), stream(ci, pi)) for ci in range(clients)
+         for pi in range(procs)], clients, procs)
+
+
+def bench_hotset(name: str, ws: int, ram_mb: int, ssd_mb: int,
+                 clients: int, procs: int, smoke: bool) -> List[BenchResult]:
+    results: List[BenchResult] = []
+    for label, ram, ssd in (("cfs", ram_mb, ssd_mb), ("cfs-nocache", 0, 0)):
+        cluster = make_cfs(4 if smoke else 10)
+        mounts = [cluster.mount("bench", client_id=f"c{i}").vfs
+                  for i in range(clients)]
+        _pin_cache(mounts, cluster.net, ram, ssd)
+        files = {(ci, pi): f"/hs_{ci}_{pi}.bin"
+                 for ci in range(clients) for pi in range(procs)}
+        _prefill(mounts, files, ws)
+        fill = _scan_pass(f"{name}Fill", label, cluster.net, mounts, files,
+                          ws, clients, procs)
+        caches = [m.client.data_cache for m in mounts
+                  if m.client.data_cache is not None]
+        before = [dict(c.stats) for c in caches]
+        crcs: List[int] = []
+        hot = _scan_pass(name, label, cluster.net, mounts, files, ws,
+                         clients, procs, crc_sink=crcs)
+        # byte-identity across the A/B is part of the row itself
+        hot.extra["read_crc"] = zlib.crc32(
+            b"".join(c.to_bytes(4, "little") for c in sorted(crcs)))
+        if caches:
+            for key in ("ram_hits", "ssd_hits", "misses"):
+                hot.extra[key] = sum(c.stats[key] for c in caches) - \
+                    sum(b[key] for b in before)
+            served = hot.extra["ram_hits"] + hot.extra["ssd_hits"]
+            hot.extra["hit_rate"] = served / max(
+                1, served + hot.extra["misses"])
+            occ = [c.occupancy() for c in caches]
+            hot.extra["ram_bytes"] = sum(o["ram_bytes"] for o in occ)
+            hot.extra["ssd_bytes"] = sum(o["ssd_bytes"] for o in occ)
+            hot.extra["ram_mb_budget"] = ram
+            hot.extra["ssd_mb_budget"] = ssd
+        results.extend((fill, hot))
+    return results
+
+
+# --------------------------------------------------- bounded-staleness A/B
+def bench_contend(readers: int, rounds: int, reads_per_round: int,
+                  ttl_us: float, smoke: bool) -> List[BenchResult]:
+    """One writer re-stamps the head of a shared file under concurrent
+    cached readers; staleness of every read is measured against the
+    writer's commit timeline."""
+    results: List[BenchResult] = []
+    for label, cached in (("cfs", True), ("cfs-nocache", False)):
+        cluster = make_cfs(4 if smoke else 10)
+        net = cluster.net
+        wm = cluster.mount("bench", client_id="w0").vfs
+        rmounts = [cluster.mount("bench", client_id=f"r{i}").vfs
+                   for i in range(readers)]
+        _pin_cache(rmounts, net, 4 if cached else 0, 8 if cached else 0)
+        for m in rmounts:
+            m.client.session.ttl_us = ttl_us    # short lease: expiry cycles
+        path = "/shared.bin"
+        fd0 = wm.open(path, O_WRONLY | O_CREAT | O_TRUNC)
+        wm.pwrite(fd0, (0).to_bytes(4, "little") + bytes(IO - 4), 0)
+        wm.close(fd0)
+
+        commits: List[Tuple[int, float]] = [(0, 0.0)]
+        reads: List[Tuple[float, int]] = []
+
+        def writer_stream():
+            state: Dict[str, int] = {}
+
+            def make(i):
+                def op():
+                    if "fd" not in state:
+                        state["fd"] = wm.open(path, O_RDWR)
+                    ver = i + 1
+                    wm.pwrite(state["fd"],
+                              ver.to_bytes(4, "little") + bytes(4092), 0)
+                    wm.fsync(state["fd"])
+                    commits.append((ver, net.current_op.now_us))
+                    if i == rounds - 1:
+                        wm.close(state["fd"])
+                return op
+            return [make(i) for i in range(rounds)]
+
+        def reader_stream(ri):
+            mnt = rmounts[ri]
+            state: Dict[str, int] = {}
+
+            def make(j):
+                def op():
+                    if "fd" not in state:
+                        state["fd"] = mnt.open(path, O_RDONLY)
+                    data = mnt.pread(state["fd"], 4096, 0)
+                    reads.append((net.current_op.now_us,
+                                  int.from_bytes(data[:4], "little")))
+                    if j == rounds * reads_per_round - 1:
+                        mnt.close(state["fd"])
+                return op
+            return [make(j) for j in range(rounds * reads_per_round)]
+
+        streams = [(_cid(wm), writer_stream())] + \
+            [(_cid(rmounts[ri]), reader_stream(ri)) for ri in range(readers)]
+        r = run_streams("HotSetContend", label, net, streams, 1 + readers, 1)
+        # staleness of a read = how long a NEWER committed version had
+        # already been visible when the read completed with an older one
+        stale_max = 0.0
+        stale_reads = 0
+        commits.sort()
+        for (t, ver) in reads:
+            newer = [cu for (cv, cu) in commits if cv == ver + 1 and cu <= t]
+            if newer:
+                stale_reads += 1
+                stale_max = max(stale_max, t - newer[0])
+        r.extra["stale_max_us"] = stale_max
+        r.extra["stale_reads"] = stale_reads
+        r.extra["reads"] = len(reads)
+        r.extra["commits"] = len(commits) - 1
+        r.extra["ttl_us"] = ttl_us
+        results.append(r)
+    return results
+
+
+def run(out_rows: List[str], smoke: bool = False) -> List[dict]:
+    results: List[BenchResult] = []
+    clients, procs = (1, 2)
+    if smoke:
+        regimes = [("HotSetRam", 4 * IO, 4, 8),
+                   ("HotSetSsd", 12 * IO, 1, 2),
+                   ("HotSetCold", 16 * IO, 1, 0)]
+    else:
+        regimes = [("HotSetRam", 16 * IO, 8, 16),
+                   ("HotSetSsd", 48 * IO, 8, 16),
+                   ("HotSetCold", 96 * IO, 4, 4)]
+    for name, ws, ram_mb, ssd_mb in regimes:
+        results.extend(bench_hotset(name, ws, ram_mb, ssd_mb,
+                                    clients, procs, smoke))
+    # reads_per_round paces the readers to span the writer's whole run (a
+    # cached 4 KB pread costs ~16 us FUSE+RAM, a writer round ~1.6 ms); the
+    # 5 ms reader TTL forces several lease-expiry/revalidation cycles per
+    # run, so the row shows staleness both accruing AND being cut at the
+    # lease boundary
+    results.extend(bench_contend(
+        readers=2, rounds=5 if smoke else 12,
+        reads_per_round=120 if smoke else 180,
+        ttl_us=5_000.0, smoke=smoke))
+    out_rows.extend(r.row() for r in results)
+    return [r.json_obj() for r in results]

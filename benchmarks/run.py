@@ -27,9 +27,10 @@ RESULTS = ROOT / "results" / "bench"
 
 
 def run_suite(name: str, rows: list, smoke: bool) -> list:
-    from . import expansion, largefile, mdtest, smallfile
+    from . import dataloader, expansion, hotset, largefile, mdtest, smallfile
     mod = {"mdtest": mdtest, "largefile": largefile,
-           "smallfile": smallfile, "expansion": expansion}[name]
+           "smallfile": smallfile, "expansion": expansion,
+           "hotset": hotset, "dataloader": dataloader}[name]
     return mod.run(rows, smoke=smoke)
 
 
@@ -62,13 +63,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
                     choices=["all", "mdtest", "largefile", "smallfile",
-                             "expansion", "roofline"])
+                             "expansion", "hotset", "dataloader",
+                             "roofline"])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny op counts (<30 s total) for CI drift checks")
     args = ap.parse_args()
     RESULTS.mkdir(parents=True, exist_ok=True)
 
-    suites = (["mdtest", "largefile", "smallfile", "expansion", "roofline"]
+    suites = (["mdtest", "largefile", "smallfile", "expansion", "hotset",
+               "dataloader", "roofline"]
               if args.suite == "all" else [args.suite])
     from .common import HEADER
     for suite in suites:

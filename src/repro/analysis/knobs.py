@@ -102,6 +102,22 @@ _DECLS = [
          "Timed control-plane heartbeat/split-check period in virtual µs",
          "no periodic control loop (driver ticks only)",
          "repro.core.resource_manager", 8),
+    Knob("CFS_CLIENT_CACHE", "1", "bool",
+         "Two-tier client-side extent cache (RAM + simulated SSD) on reads",
+         "seed per-packet network fetch path (no data caching)",
+         "repro.cache.extent_cache", 9),
+    Knob("CFS_CACHE_RAM_MB", "64", "int",
+         "RAM tier byte budget of the client extent cache, in MB",
+         "no RAM tier (inserts go straight to the SSD tier, if any)",
+         "repro.cache.extent_cache", 9),
+    Knob("CFS_CACHE_SSD_MB", "256", "int",
+         "Simulated-SSD tier byte budget of the client extent cache, in MB",
+         "no SSD tier (RAM evictions are dropped instead of demoted)",
+         "repro.cache.extent_cache", 9),
+    Knob("CFS_CACHE_WRITE_THROUGH", "0", "bool",
+         "Insert committed append/small-write packets into the cache",
+         "read-only fills (write path leaves the cache untouched)",
+         "repro.cache.extent_cache", 9),
 ]
 
 KNOBS: Dict[str, Knob] = {k.name: k for k in _DECLS}

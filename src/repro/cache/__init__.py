@@ -1,0 +1,6 @@
+"""Client-side data caching (PR 9): the tiered RAM + simulated-SSD
+extent cache.  See :mod:`repro.cache.extent_cache`."""
+
+from .extent_cache import TieredExtentCache
+
+__all__ = ["TieredExtentCache"]

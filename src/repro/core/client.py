@@ -48,6 +48,7 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from ..analysis import knobs
 from ..analysis import sanitizer as _san
+from ..cache.extent_cache import TieredExtentCache
 from .extent_store import ExtentError
 from .meta_node import (DentryExists, MetaError, NoSuchDentry, NoSuchInode,
                         PartitionFull, RangeExhausted, WrongRange)
@@ -101,6 +102,16 @@ META_JOURNAL_DEPTH = knobs.get_int("CFS_META_JOURNAL_DEPTH")
 # start fallback) after twice as many.  Below both, reads never hedge.
 HEDGE_MIN_GROUP_SAMPLES = 4
 HEDGE_MIN_GLOBAL_SAMPLES = 8
+
+# Tiered client-side extent cache (PR 9): committed ≤128 KB extent packets
+# cached in RAM with 2Q-style demotion to a simulated per-client SSD,
+# guarded by the inode's extent-map mvcc under the PR 4 lease contract.
+# CFS_CLIENT_CACHE=0 (or both byte budgets 0) restores the seed path:
+# every packet read is a network fetch.  Untimed ops never touch the cache.
+CLIENT_CACHE = knobs.get_bool("CFS_CLIENT_CACHE")
+CACHE_RAM_MB = knobs.get_int("CFS_CACHE_RAM_MB")
+CACHE_SSD_MB = knobs.get_int("CFS_CACHE_SSD_MB")
+CACHE_WRITE_THROUGH = knobs.get_bool("CFS_CACHE_WRITE_THROUGH")
 
 
 class _LatencyEwma:
@@ -288,11 +299,20 @@ class CfsClient:
                       "meta_barriers": 0, "meta_barrier_stalls": 0,
                       "meta_barrier_stall_us": 0.0,
                       # ---- split-aware routing counters ----
-                      "wrong_range_redirects": 0}
+                      "wrong_range_redirects": 0,
+                      # ---- tiered extent-cache counters ----
+                      "data_cache_hits": 0, "data_cache_misses": 0}
         # lease/version session over the inode/dentry caches (TTL knobs
         # CFS_META_TTL / CFS_META_NEG_TTL; ttl 0 = seed sync-on-open)
         from .meta_session import MetaSession
         self.session = MetaSession(self)
+        # tiered RAM + simulated-SSD extent cache (PR 9); None = seed path
+        self.cache_write_through = CACHE_WRITE_THROUGH
+        self.data_cache: Optional[TieredExtentCache] = None
+        if CLIENT_CACHE and (CACHE_RAM_MB > 0 or CACHE_SSD_MB > 0):
+            self.data_cache = TieredExtentCache(
+                client_id, net, volume,
+                CACHE_RAM_MB << 20, CACHE_SSD_MB << 20)
         # routing-miss resync limiter (one RM round-trip per window)
         self.sync_window_us = SYNC_WINDOW_US
         self._last_sync_us: Optional[float] = None
@@ -1008,6 +1028,12 @@ class CfsClient:
                 continue
             small = esize <= SMALL_FILE_THRESHOLD and eoff != 0 or (
                 esize < SMALL_FILE_THRESHOLD and size <= SMALL_FILE_THRESHOLD)
+            if self.data_cache is not None:
+                # local invalidation only — peers with the shared extent
+                # still cached serve stale bytes until their lease expires
+                # (the bounded-staleness contract the sanitizer audits)
+                lo, hi = (eoff, eoff + esize) if small else (0, MAX_UINT64)
+                self.data_cache.invalidate_extent_range(pid, eid, lo, hi)
             for nid in dp.replicas:
                 try:
                     if small:
@@ -1262,7 +1288,8 @@ class CfsClient:
         pieces = self._map_pieces(inode, offset, size)
         op = self.net.current_op
         if op is not None and op.timed and self.read_window > 0:
-            done = self._windowed_fetch(out, pieces, op.now_us, hedge_us)
+            done = self._windowed_fetch(out, pieces, op.now_us, hedge_us,
+                                        cache_ctx=self._cache_ctx(inode))
             op.advance_to(done)
         else:
             for (pos, pid, eid, eoff, ln) in pieces:
@@ -1284,8 +1311,48 @@ class CfsClient:
             return b"", at
         out = bytearray(size)
         done = self._windowed_fetch(out, self._map_pieces(inode, offset, size),
-                                    at, hedge_us)
+                                    at, hedge_us,
+                                    cache_ctx=self._cache_ctx(inode))
         return bytes(out), done
+
+    def _cache_ctx(self, inode: Dict
+                   ) -> Optional[Tuple[int, int, Optional[float], float]]:
+        """Build the extent-cache validity context ``(ino, mv, granted_us,
+        bound_us)`` for a read of ``inode``, or None when the read must
+        bypass the cache (cache off, ``CFS_META_TTL=0`` — without leases a
+        cached packet has no staleness bound — or a view that carries no
+        inode number, e.g. a bare extent list synthesized by a test).
+
+        Freshness is delegated to the PR 4 lease contract.  An UNEXPIRED
+        inode lease is authority as-is: the context is built from a pure
+        local peek, zero RPCs, so a cache-enabled client is timing- and
+        stats-identical to the seed on every workload whose reads stay
+        under live leases (the committed mdtest/largefile baselines).  An
+        expired lease revalidates through ``getattr`` — the 16-byte
+        ``stat_version`` read that renews an unchanged lease in place or
+        drops the stale inode view (and, via ``forget_inode``, this
+        inode's cached packets).  Either way a cached packet is never
+        served staler than one ``CFS_META_TTL`` behind the last committed
+        extent-map mvcc."""
+        cache = self.data_cache
+        ino = inode.get("inode")
+        if cache is None or ino is None or self.session.ttl_us <= 0:
+            return None
+        op = self.net.current_op
+        if op is None or not op.timed:
+            return None             # untimed ops stay on the seed path
+        lease = self.session.inode_lease(ino)
+        if lease is not None and op.now_us < lease[2]:
+            return (ino, lease[0], lease[1], self.session.ttl_us)
+        try:
+            self.session.getattr(ino, use_cache=True)
+        except NotFound:            # unlinked under us: no bytes either
+            cache.drop_inode(ino)
+            return None
+        lease = self.session.inode_lease(ino)
+        if lease is None:
+            return None
+        return (ino, lease[0], lease[1], self.session.ttl_us)
 
     @staticmethod
     def _map_pieces(inode: Dict, offset: int, size: int
@@ -1305,7 +1372,10 @@ class CfsClient:
 
     def _windowed_fetch(self, out: bytearray,
                         pieces: List[Tuple[int, int, int, int, int]],
-                        at: float, hedge_us: Optional[float] = None) -> float:
+                        at: float, hedge_us: Optional[float] = None,
+                        cache_ctx: Optional[
+                            Tuple[int, int, Optional[float], float]] = None
+                        ) -> float:
         """Issue the pieces as ≤128 KB packet fetches with a bounded
         in-flight window starting at ``at``; fill ``out``; return the last
         completion time.  The send frontier advances to each request's NIC
@@ -1313,16 +1383,36 @@ class CfsClient:
         earlier replies are still in flight — when the window is full, the
         next send waits for the EARLIEST outstanding completion (replies
         from different partitions arrive out of order, unlike the append
-        chain's FIFO acks)."""
+        chain's FIFO acks).
+
+        With ``cache_ctx`` set, each packet first consults the tiered
+        extent cache: a hit is served at RAM/SSD cost and never enters the
+        fetch window — it reaches neither the hedge machinery nor the
+        latency EWMAs / ``read_affinity`` (a zero-cost local copy says
+        nothing about replica speed and must not dilute the p99 budget).
+        Misses fetch as before and fill the cache at their arrival time."""
         window: List[float] = []
         depth = max(1, self.read_window)    # read_extents_at may be called
         send_frontier = at                  # with window 0: degrade to serial
         last_done = at
+        cache = self.data_cache if cache_ctx is not None else None
         for (pos, pid, eid, eoff, ln) in pieces:
             dp = self._dp(pid)
             off = 0
             while off < ln:
                 n = min(PACKET_SIZE, ln - off)
+                if cache is not None:
+                    key = (self.volume, pid, eid, eoff + off)
+                    hit = cache.serve(key, n, cache_ctx, send_frontier)
+                    if hit is not None:
+                        data, done = hit
+                        out[pos + off : pos + off + n] = data
+                        send_frontier = max(send_frontier, done)
+                        last_done = max(last_done, done)
+                        self.stats["data_cache_hits"] += 1
+                        off += n
+                        continue
+                    self.stats["data_cache_misses"] += 1
                 send_at = send_frontier
                 if len(window) >= depth:
                     first = min(window)
@@ -1331,6 +1421,9 @@ class CfsClient:
                 data, done, tx_done = self._timed_fetch(
                     dp, eid, eoff + off, n, send_at, hedge_us)
                 out[pos + off : pos + off + len(data)] = data
+                if cache is not None and len(data) == n:
+                    cache.insert((self.volume, pid, eid, eoff + off),
+                                 bytes(data), cache_ctx, done)
                 window.append(done)
                 last_done = max(last_done, done)
                 send_frontier = max(send_frontier, tx_done)
@@ -1341,6 +1434,9 @@ class CfsClient:
         """Free [eoff, eoff+length) of one extent on every replica — the
         ftruncate tail-punch (same async fallocate path as small-file
         deletes, §2.7.3)."""
+        if self.data_cache is not None:
+            self.data_cache.invalidate_extent_range(
+                pid, eid, eoff, eoff + length)
         try:
             dp = self._dp(pid)
         except NotFound:
@@ -1585,6 +1681,7 @@ class CfsFile:
         self._buf_start = foff
         self._extents.extend(keys)
         self._size = max(self._size, foff)
+        self._cache_write_through(keys, chunk)
 
     def _write_random(self, data: bytes) -> None:
         """Fig. 5: split into overwrite (in-place, raft) + append parts.
@@ -1605,6 +1702,11 @@ class CfsFile:
         Ranges below EOF that NO extent covers (holes left by ftruncate-grow
         or trimmed tails) get fresh extents instead: an overwrite must never
         silently drop bytes into a hole."""
+        if self.client.data_cache is not None:
+            # in-place raft overwrite: the DATA changes but the extent keys
+            # and the inode mv stay put until the next fsync, so an mv check
+            # cannot catch it — drop the inode's cached packets eagerly
+            self.client.data_cache.drop_inode(self.inode["inode"])
         covered: List[Tuple[int, int]] = []
         for k in self._extents:
             seg_lo, seg_hi = k.file_offset, k.file_offset + k.size
@@ -1652,7 +1754,7 @@ class CfsFile:
         return data
 
     def _inode_view(self) -> Dict:
-        return {"size": self._size,
+        return {"inode": self.inode["inode"], "size": self._size,
                 "extents": [k.as_tuple() for k in self._extents]}
 
     def _wver_bump(self) -> None:
@@ -1736,6 +1838,10 @@ class CfsFile:
         to be dropped silently, which corrupted truncate-to-nonzero."""
         self._wver_bump()           # cached runs may cover punched bytes
         self._ra_reset()
+        if self.client.data_cache is not None:
+            # shrink punches byte ranges out of live extents; the extent
+            # cache drops the whole inode (simple and always safe)
+            self.client.data_cache.drop_inode(self.inode["inode"])
         self.client.drain_window(self._inflight)   # never punch under the window
         if size == 0:
             # everything goes — no point making the buffer durable first
@@ -1779,19 +1885,47 @@ class CfsFile:
         self._buf.clear()
         self._dirty = True                  # POSIX: the fd offset is NOT moved
 
+    def _cache_write_through(self, keys: List[ExtentKey],
+                             chunk: bytes) -> None:
+        """``CFS_CACHE_WRITE_THROUGH=1``: the packets just committed go
+        straight into the extent cache (a producer that re-reads its own
+        output — checkpoint-then-restore — hits locally).  Stamped with the
+        CURRENT session mv; the fsync's ``update_extents`` flows through
+        ``note_extent_map``, which re-stamps entries still covered by an
+        identical piece of the new map, so the fill survives its own
+        commit.  Off by default: fills cost RAM/SSD occupancy that a
+        write-mostly workload never reads back."""
+        client = self.client
+        cache = client.data_cache
+        op = client.net.current_op
+        if cache is None or not client.cache_write_through or \
+                op is None or not op.timed:
+            return
+        ctx = client._cache_ctx(self.inode)
+        if ctx is None:
+            return
+        off = 0
+        for k in keys:
+            cache.insert((client.volume, k.partition_id, k.extent_id,
+                          k.extent_offset),
+                         chunk[off : off + k.size], ctx, op.now_us)
+            off += k.size
+
     # ---- flush / fsync / close ----------------------------------------------------
     def flush(self) -> None:
         """Push buffered bytes out.  A never-streamed file that stayed ≤128 KB
         takes the small-file aggregated path."""
         if self._buf:
             if not self._extents and self._buf_start + len(self._buf) <= SMALL_FILE_THRESHOLD:
-                keys = self.client._write_small_file(bytes(self._buf))
+                small = bytes(self._buf)
+                keys = self.client._write_small_file(small)
                 for k in keys:
                     k.file_offset = self._buf_start
                 self._extents.extend(keys)
                 self._size = self._buf_start + len(self._buf)
                 self._buf_start = self._size
                 self._buf.clear()
+                self._cache_write_through(keys, small)
             else:
                 self._flush_full_packets(force=True)
 

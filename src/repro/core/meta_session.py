@@ -395,6 +395,18 @@ class MetaSession:
     def forget_inode(self, ino: int) -> None:
         self.client.inode_cache.pop(ino, None)
         self._imeta.pop(ino, None)
+        # the central inode-drop funnel (unlink-dead, evict, revalidate-gone,
+        # fetch-NotFound) also empties the data cache: no metadata, no bytes
+        cache = getattr(self.client, "data_cache", None)
+        if cache is not None:
+            cache.drop_inode(ino)
+
+    def inode_lease(self, ino: int) -> Optional[Tuple[int, float, float]]:
+        """The inode's current ``(mv, granted_us, expires_us)`` lease, or
+        None when nothing is leased (untimed op / TTL 0 / never fetched).
+        The extent cache uses ``granted_us`` to assert the one-TTL
+        staleness bound on every serve under ``CFS_SANITIZE=1``."""
+        return self._imeta.get(ino)
 
     def forget_dentry(self, parent: int, name: str,
                       negative: bool = False) -> None:
@@ -434,6 +446,12 @@ class MetaSession:
             return
         if op in ("create_inode", "link_inc", "update_extents"):
             self.note_inode(result)
+            if op == "update_extents":
+                # the reply is the new extent map + mv: re-stamp cached
+                # packets it still covers, drop the ones it obsoletes
+                cache = getattr(self.client, "data_cache", None)
+                if cache is not None:
+                    cache.note_extent_map(result)
         elif op == "unlink_dec":
             from .types import InodeFlag
             if result["nlink"] <= 0 or result["flag"] == InodeFlag.MARK_DELETED:

@@ -212,12 +212,25 @@ class LatencyModel:
     bw_bytes_per_us: float = 125.0   # 1000 Mbps == 125 B/us (paper's NIC)
     disk_seek_us: float = 50.0       # SSD access latency
     disk_bw_bytes_per_us: float = 500.0  # ~500 MB/s SSD
+    # client-cache tier costs (the tiered extent cache, PR 9): a RAM hit is
+    # a memcpy at DRAM bandwidth, an SSD hit queues on the client's local
+    # "ssd:<client>" Resource with this latency + size/bandwidth service time
+    ram_lat_us: float = 0.5              # DRAM access + copy setup
+    ram_bw_bytes_per_us: float = 20000.0  # ~20 GB/s memory bandwidth
+    ssd_lat_us: float = 80.0             # NVMe read latency
+    ssd_bw_bytes_per_us: float = 2000.0  # ~2 GB/s local NVMe
 
     def net_cost(self, nbytes: int) -> float:
         return self.rtt_us + nbytes / self.bw_bytes_per_us
 
     def disk_cost(self, nbytes: int) -> float:
         return self.disk_seek_us + nbytes / self.disk_bw_bytes_per_us
+
+    def ram_cost(self, nbytes: int) -> float:
+        return self.ram_lat_us + nbytes / self.ram_bw_bytes_per_us
+
+    def ssd_cost(self, nbytes: int) -> float:
+        return self.ssd_lat_us + nbytes / self.ssd_bw_bytes_per_us
 
 
 class OpTimer:

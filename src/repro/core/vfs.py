@@ -605,6 +605,17 @@ class CfsVfs:
         return out
 
     # ---------------------------------------------------------- maintenance
+    def cache_stats(self) -> Dict[str, float]:
+        """Hit/occupancy counters of the client's tiered extent cache
+        (empty dict when ``CFS_CLIENT_CACHE=0``) — the benchmark/diagnostic
+        surface, mirroring ``client.stats`` for the metadata caches."""
+        cache = self.client.data_cache
+        if cache is None:
+            return {}
+        out = dict(cache.stats)
+        out.update(cache.occupancy())
+        return out
+
     def handle(self, fd: int) -> CfsFile:
         """Low-level escape hatch (tools/demos): the CfsFile behind an fd."""
         return self._file(self._of(fd))

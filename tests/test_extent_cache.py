@@ -1,0 +1,343 @@
+"""Tiered client-side extent cache (PR 9).
+
+Covers the ISSUE-9 acceptance properties:
+
+* tier mechanics — RAM LRU, demotion to the simulated SSD on RAM
+  pressure, promotion back on an SSD hit, budget-bounded eviction,
+  mvcc-stale entries dropped on serve;
+* a second pass over a RAM-resident working set is >=5x faster than the
+  cache-off seed path at byte-identical contents, and an SSD-resident
+  pass lands strictly between;
+* invalidation — truncate-shrink, rename-over/unlink of an open cached
+  file, in-place overwrite, and a peer's punch-hole delete of a shared
+  small-file extent (lease-bounded staleness);
+* composition with the read path — a cache hit must NOT touch the hedge
+  budget EWMAs or the read-affinity map (zero-cost local serves would
+  poison the p99 budget), and hedging still adapts afterwards;
+* untimed ops and ``data_cache = None`` keep the seed path bit-exact;
+* same-seed reruns are bit-identical and ``CFS_SANITIZE=1`` stays clean.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.analysis import sanitizer
+from repro.cache.extent_cache import TieredExtentCache
+from repro.core import (CfsCluster, O_CREAT, O_RDONLY, O_RDWR, O_TRUNC,
+                        O_WRONLY, PACKET_SIZE)
+from repro.core.extent_store import ExtentError
+
+PKT = PACKET_SIZE
+
+
+def _cluster(seed: int = 42, n_dp: int = 4):
+    c = CfsCluster(n_meta=3, n_data=3, extent_max_size=8 * 1024 * 1024,
+                   seed=seed)
+    c.create_volume("v", n_meta_partitions=3, n_data_partitions=n_dp)
+    return c
+
+
+def _mount(c, cid: str, ram_mb: int = 4, ssd_mb: int = 8):
+    v = c.mount("v", client_id=cid).vfs
+    cl = v.client
+    cl.data_cache = TieredExtentCache(cid, c.net, "v",
+                                      ram_mb << 20, ssd_mb << 20)
+    return v
+
+
+def _write(vfs, path: str, data: bytes) -> None:
+    fd = vfs.open(path, O_WRONLY | O_CREAT | O_TRUNC)
+    vfs.pwrite(fd, data, 0)
+    vfs.close(fd)
+
+
+def _timed_pread(c, vfs, path: str, size: int, off: int = 0):
+    op = c.net.begin_op(at=0.0)
+    try:
+        fd = vfs.open(path, O_RDONLY)
+        data = vfs.pread(fd, size, off)
+        vfs.close(fd)
+    finally:
+        c.net.end_op()
+    return data, op.us
+
+
+# ------------------------------------------------------------ tier mechanics
+def _bare_cache(c, ram_pkts: int, ssd_pkts: int) -> TieredExtentCache:
+    return TieredExtentCache("c0", c.net, "v", ram_pkts * PKT, ssd_pkts * PKT)
+
+
+def test_ram_lru_demotes_to_ssd_and_promotes_back():
+    c = _cluster()
+    cache = _bare_cache(c, ram_pkts=2, ssd_pkts=4)
+    ctx = (7, 3, None, 1e6)
+    for i in range(3):                       # third insert demotes the first
+        cache.insert(("v", 0, 1, i * PKT), bytes([i]) * PKT, ctx, at=0.0)
+    assert cache.stats["demotions"] == 1
+    assert cache.occupancy() == {"ram_bytes": 2 * PKT, "ssd_bytes": PKT,
+                                 "ram_entries": 2, "ssd_entries": 1}
+    # SSD hit: charged on the ssd:<client> resource, promoted back to RAM
+    data, done = cache.serve(("v", 0, 1, 0), PKT, ctx, at=100.0)
+    assert data == bytes([0]) * PKT
+    assert done >= 100.0 + c.net.model.ssd_cost(PKT)
+    assert cache.stats["ssd_hits"] == 1 and cache.stats["promotions"] == 1
+    # RAM hit: pure memcpy cost, no queueing
+    data, done = cache.serve(("v", 0, 1, 0), PKT, ctx, at=200.0)
+    assert data == bytes([0]) * PKT
+    assert done == 200.0 + c.net.model.ram_cost(PKT)
+
+
+def test_ssd_budget_evicts_and_mv_mismatch_drops():
+    c = _cluster()
+    cache = _bare_cache(c, ram_pkts=1, ssd_pkts=1)
+    ctx = (7, 3, None, 1e6)
+    for i in range(3):
+        cache.insert(("v", 0, 1, i * PKT), bytes([i]) * PKT, ctx, at=0.0)
+    assert cache.stats["evictions"] == 1     # packet 0 fell off the SSD LRU
+    assert cache.serve(("v", 0, 1, 0), PKT, ctx, at=0.0) is None
+    # an entry read under mv=3 must not serve a reader that leased mv=4
+    stale = cache.stats["stale_drops"]
+    assert cache.serve(("v", 0, 1, 2 * PKT), PKT, (7, 4, None, 1e6),
+                       at=0.0) is None
+    assert cache.stats["stale_drops"] == stale + 1
+    assert cache.occupancy()["ram_entries"] + \
+        cache.occupancy()["ssd_entries"] == 1
+
+
+def test_drop_inode_and_range_invalidation():
+    c = _cluster()
+    cache = _bare_cache(c, ram_pkts=8, ssd_pkts=8)
+    cache.insert(("v", 0, 1, 0), b"a" * PKT, (7, 1, None, 1e6), at=0.0)
+    cache.insert(("v", 0, 1, PKT), b"b" * PKT, (7, 1, None, 1e6), at=0.0)
+    cache.insert(("v", 0, 2, 0), b"c" * 1000, (8, 5, None, 1e6), at=0.0)
+    # range-precise: only the overlapping entry of extent 1 dies
+    assert cache.invalidate_extent_range(0, 1, PKT, PKT + 1) == 1
+    assert cache.serve(("v", 0, 1, 0), PKT, (7, 1, None, 1e6), 0.0)
+    assert cache.drop_inode(7) == 1
+    assert cache.serve(("v", 0, 1, 0), PKT, (7, 1, None, 1e6), 0.0) is None
+    assert cache.serve(("v", 0, 2, 0), 1000, (8, 5, None, 1e6), 0.0)
+
+
+# ----------------------------------------------------- second-pass speedups
+def test_second_pass_ram_tier_5x_and_ssd_between():
+    """The acceptance triplet: RAM-resident second pass >=5x the cache-off
+    path, SSD-resident strictly between, contents byte-identical."""
+    payload = bytes(range(256)) * (4 * PKT // 256)
+
+    def passes(ram_mb, ssd_mb, cached=True):
+        c = _cluster()
+        setup = c.mount("v", client_id="w").vfs
+        _write(setup, "/hot.bin", payload)
+        v = c.mount("v", client_id="r").vfs
+        if cached:
+            v.client.data_cache = TieredExtentCache(
+                "r", c.net, "v", ram_mb << 20, ssd_mb << 20)
+        else:
+            v.client.data_cache = None
+        d1, t1 = _timed_pread(c, v, "/hot.bin", len(payload))
+        d2, t2 = _timed_pread(c, v, "/hot.bin", len(payload))
+        assert d1 == payload and d2 == payload
+        return t2
+
+    t_off = passes(0, 0, cached=False)
+    t_ram = passes(4, 8)                      # 512 KB set fits 4 MB RAM
+    assert t_ram * 5 <= t_off, f"RAM pass2 {t_ram} vs cache-off {t_off}"
+    # RAM budget 0 forces every fill/hit onto the simulated SSD tier
+    t_ssd = passes(0, 8)
+    assert t_ram < t_ssd < t_off, (t_ram, t_ssd, t_off)
+
+
+def test_untimed_ops_and_disabled_cache_stay_on_seed_path():
+    c = _cluster()
+    setup = c.mount("v", client_id="w").vfs
+    _write(setup, "/seed.bin", b"x" * PKT)
+    v = _mount(c, "r")
+    # untimed read: no fills, no hits — the cache stays empty
+    fd = v.open("/seed.bin", O_RDONLY)
+    assert v.pread(fd, PKT, 0) == b"x" * PKT
+    v.close(fd)
+    assert v.cache_stats()["ram_entries"] == 0
+    assert v.cache_stats()["ssd_entries"] == 0
+    assert v.client.stats["data_cache_hits"] == 0
+
+
+# ------------------------------------------------------------- invalidation
+def test_truncate_shrink_invalidates_cached_tail():
+    c = _cluster()
+    v = _mount(c, "c0")
+    _write(v, "/t.bin", b"A" * PKT + b"B" * PKT)
+    _timed_pread(c, v, "/t.bin", 2 * PKT)            # fill both packets
+    op = c.net.begin_op(at=0.0)
+    try:
+        fd = v.open("/t.bin", O_RDWR)
+        v.ftruncate(fd, PKT // 2)
+        v.ftruncate(fd, 2 * PKT)         # grow back: tail is now a HOLE
+        v.close(fd)
+    finally:
+        c.net.end_op()
+    data, _ = _timed_pread(c, v, "/t.bin", 2 * PKT)
+    assert data == b"A" * (PKT // 2) + bytes(2 * PKT - PKT // 2), \
+        "stale cached tail served after truncate-shrink"
+
+
+def test_overwrite_drops_cached_packets_eagerly():
+    """In-place raft overwrites change bytes under UNCHANGED extent keys
+    and mv (until fsync) — only the eager drop catches them."""
+    c = _cluster()
+    v = _mount(c, "c0")
+    _write(v, "/o.bin", b"A" * (2 * PKT))
+    _timed_pread(c, v, "/o.bin", 2 * PKT)
+    op = c.net.begin_op(at=0.0)
+    try:
+        fd = v.open("/o.bin", O_RDWR)
+        v.pwrite(fd, b"Z" * 4096, 100)
+        data = v.pread(fd, 2 * PKT, 0)
+        v.close(fd)
+    finally:
+        c.net.end_op()
+    want = b"A" * 100 + b"Z" * 4096 + b"A" * (2 * PKT - 4096 - 100)
+    assert data == want
+
+
+def test_unlink_and_recreate_does_not_serve_old_bytes():
+    """rename-over flow (unlink + rename, this VFS has no implicit
+    replace): the path's new file (fresh inode) must never see the old
+    inode's cached packets, and the local unlink purges them even while
+    an fd is still open on the dead inode."""
+    c = _cluster()
+    v = _mount(c, "c0")
+    _write(v, "/r.tmp", b"N" * PKT)          # the replacement, staged aside
+    _write(v, "/r.bin", b"O" * PKT)
+    op = c.net.begin_op(at=0.0)
+    try:
+        old_fd = v.open("/r.bin", O_RDONLY)
+        assert v.pread(old_fd, PKT, 0) == b"O" * PKT     # cached under ino A
+        old_ino = v.handle(old_fd).inode["inode"]
+        v.unlink("/r.bin")
+        v.rename("/r.tmp", "/r.bin")                     # rename-over
+        # the local unlink funnels through forget_inode -> drop_inode: the
+        # dead inode's packets are gone, not waiting out a lease
+        assert old_ino not in v.client.data_cache._by_ino
+        new_fd = v.open("/r.bin", O_RDONLY)
+        assert v.pread(new_fd, PKT, 0) == b"N" * PKT
+        # this VFS destroys data eagerly on unlink (no POSIX keep-alive):
+        # the old handle errors rather than the cache resurrecting bytes
+        with pytest.raises(ExtentError):
+            v.pread(old_fd, PKT, 0)
+        v.close(new_fd)
+        v.close(old_fd)
+    finally:
+        c.net.end_op()
+
+
+def test_peer_punch_hole_staleness_is_lease_bounded():
+    """Client A deletes a small file whose bytes live in a SHARED
+    aggregated extent; client B still has them cached.  B's stale serves
+    are legal only under its inode lease — one TTL — after which the
+    revalidation sees the inode gone and B's cache drops the bytes."""
+    c = _cluster()
+    a = c.mount("v", client_id="a").vfs
+    _write(a, "/s1.bin", b"1" * 4096)        # small files: shared extent
+    _write(a, "/s2.bin", b"2" * 4096)
+    b = _mount(c, "b")
+    b.client.session.ttl_us = 10_000.0
+    op = c.net.begin_op(at=0.0)
+    try:
+        fd = b.open("/s1.bin", O_RDONLY)
+        assert b.pread(fd, 4096, 0) == b"1" * 4096       # fill B's cache
+        ino = b.handle(fd).inode["inode"]
+        a.unlink("/s1.bin")        # queues a punch of the shared extent
+        # WITHIN the lease: B legally serves the dead file's bytes from
+        # its RAM tier — the bounded-staleness window data shares with
+        # metadata (the sanitizer fixture below would trip otherwise)
+        hits0 = b.client.stats["data_cache_hits"]
+        assert b.pread(fd, 4096, 0) == b"1" * 4096
+        assert b.client.stats["data_cache_hits"] == hits0 + 1
+        # PAST the lease: the stat_version probe discovers the inode is
+        # gone and forget_inode purges the cached packets — the next read
+        # goes back to the NETWORK, ending the local stale-serve window
+        # (the data node's garbage bytes linger until its async punch
+        # workers run; that is space reclamation, not cache staleness)
+        c.net.current_op.advance_to(20_000.0)
+        b.pread(fd, 4096, 0)
+        assert ino not in b.client.data_cache._by_ino
+        assert b.client.stats["data_cache_hits"] == hits0 + 1
+    finally:
+        c.net.end_op()
+    assert c.run_background_tasks() > 0      # the punch actually lands
+    # neighbour /s2.bin sharing the extent is untouched by the punch
+    data, _ = _timed_pread(c, b, "/s2.bin", 4096)
+    assert data == b"2" * 4096
+
+
+# ------------------------------------------- hedging / affinity composition
+def test_cache_hit_leaves_hedge_ewma_and_affinity_alone():
+    c = _cluster(n_dp=1)
+    setup = c.mount("v", client_id="w").vfs
+    _write(setup, "/h.bin", b"q" * (2 * PKT))
+    st = setup.stat("/h.bin")
+    gid = f"dp{st['extents'][0][0]}"
+    v = _mount(c, "r")
+    cl = v.client
+    # warm: 10 distinct offsets, all misses — EWMAs and affinity fill up
+    for i in range(10):
+        _timed_pread(c, v, "/h.bin", 4096, 4096 * i)
+    n_before = cl._read_lat[gid].n
+    n_all_before = cl._read_lat_all.n
+    affinity_before = dict(cl.read_affinity)
+    hits_before = cl.stats["data_cache_hits"]
+    for _ in range(5):                       # cached re-reads: all hits
+        data, _ = _timed_pread(c, v, "/h.bin", 4096, 0)
+        assert data == b"q" * 4096
+    assert cl.stats["data_cache_hits"] >= hits_before + 5
+    assert cl._read_lat[gid].n == n_before, \
+        "cache hits must not feed the hedge-budget EWMA"
+    assert cl._read_lat_all.n == n_all_before
+    assert cl.read_affinity == affinity_before, \
+        "cache hits must not rewrite read affinity"
+    # hedging still adapts after the cache-heavy phase: a straggler on an
+    # UNCACHED offset blows the (unpolluted) budget and races the hedge
+    leader = cl._dp(st["extents"][0][0]).replicas[0]
+    cl.read_affinity.pop(gid, None)
+    c.net.set_straggler(leader, 50_000.0)
+    hedges0 = cl.stats["hedged_reads"]
+    data, cost = _timed_pread(c, v, "/h.bin", 4096, PKT + 4096)
+    c.net.set_straggler(leader, 0.0)
+    assert data == b"q" * 4096
+    assert cl.stats["hedged_reads"] > hedges0
+    assert cost < 50_000.0
+
+
+# -------------------------------------------------- determinism / sanitizer
+def test_same_seed_rerun_is_bit_identical():
+    def trace():
+        c = _cluster(seed=7)
+        setup = c.mount("v", client_id="w").vfs
+        _write(setup, "/d.bin", bytes(range(256)) * (4 * PKT // 256))
+        v = _mount(c, "r", ram_mb=0, ssd_mb=8)       # SSD tier: queueing on
+        out = []
+        for _ in range(3):
+            d, t = _timed_pread(c, v, "/d.bin", 4 * PKT)
+            out.append((t, len(d)))
+        out.append(tuple(sorted(v.cache_stats().items())))
+        return out
+
+    assert trace() == trace()
+
+
+def test_sanitizer_clean_on_cached_reads():
+    prev = sanitizer.SAN
+    s = sanitizer.enable()
+    try:
+        c = _cluster()
+        setup = c.mount("v", client_id="w").vfs
+        _write(setup, "/san.bin", b"s" * (2 * PKT))
+        v = _mount(c, "r")
+        for _ in range(3):
+            data, _ = _timed_pread(c, v, "/san.bin", 2 * PKT)
+            assert data == b"s" * (2 * PKT)
+        assert v.client.stats["data_cache_hits"] > 0
+        assert s.violations == 0
+    finally:
+        sanitizer.SAN = prev

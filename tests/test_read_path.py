@@ -247,6 +247,7 @@ def test_hedged_read_dodges_straggler_on_the_timeline():
     v = c.mount("v", client_id="c1").vfs
     cl = v.client
     cl.read_window = 8
+    cl.data_cache = None    # a cached re-read would (correctly) never hedge
 
     def timed_pread(off):
         op = c.net.begin_op(at=0.0)
