@@ -103,6 +103,7 @@ def run_streams(
     samples: Optional[List[Tuple[float, float]]] = None,
     events: Optional[List[Tuple[float, Callable[[], None]]]] = None,
     periodic: Optional[List[Tuple[float, Callable[[], None]]]] = None,
+    lat_by_stream: Optional[List[List[float]]] = None,
 ) -> BenchResult:
     """streams: one (client_id, ops) per (client, proc) stream; ``ops`` is
     any iterable of thunks (list or generator) — the engine pulls the next
@@ -114,6 +115,10 @@ def run_streams(
     ``samples``, if given, collects (submit_time_us, latency_us) per op so
     suites can bucket tail latency over the run's timeline.
 
+    ``lat_by_stream``, if given, is extended to one latency list per
+    stream index — multi-tenant suites (the qos A/B) slice per-volume
+    percentiles out of one contended run this way.
+
     ``events`` is a list of one-shot (at_us, fn) control actions — a node
     join, an OSD add — and ``periodic`` a list of (period_us, fn) recurring
     ones (the RM's heartbeat/split loop).  Both run as TIMED ops at their
@@ -123,6 +128,9 @@ def run_streams(
     net.reset_accounting()
     sched = EventScheduler()
     iters = [iter(ops) for _, ops in streams]
+    if lat_by_stream is not None:
+        lat_by_stream.extend([] for _ in range(len(streams)
+                                               - len(lat_by_stream)))
     lat: List[float] = []
     done = 0
     live = len(streams)
@@ -161,6 +169,8 @@ def run_streams(
             net.end_op()
         end = op.now_us
         lat.append((end - t) / weight)
+        if lat_by_stream is not None:
+            lat_by_stream[si].append((end - t) / weight)
         if samples is not None:
             samples.append((round(t, 3), round((end - t) / weight, 3)))
         done += 1

@@ -1,0 +1,150 @@
+"""Multi-tenant QoS benchmark — per-volume WFQ + admission control A/B.
+
+Two volumes share one small cluster (3 meta nodes, so every partition of
+both volumes lands on the same raft set and their leaders share NICs).
+The *victim* volume runs a latency-sensitive stat/open stream over unique
+pre-created files (cold session cache — every op pays a real meta RPC);
+the *noisy* volume runs mdtest DirCreation at 64 procs, the classic
+metadata aggressor.  Three rows, fresh identically-seeded clusters each:
+
+* ``isolated``  — victim alone: the reference tail.
+* ``cfs-qos``   — victim + aggressor with ``CFS_QOS`` on: the meta-leader
+  NICs schedule per-volume weighted-fair flows, so the victim's p99 must
+  stay within a bounded factor of isolated (the test pins ≤ 2×).
+* ``cfs-noqos`` — same contention with QoS off: the seed FIFO cliff,
+  committed so the A/B is visible in BENCH_qos.json.
+
+The contended rows report victim-only latency percentiles (sliced out of
+the shared event timeline via ``lat_by_stream``); ``sim_iops`` stays the
+aggregate-run figure.  Extras carry the headline ``p99_vs_isolated``
+ratio plus the per-volume NIC accounting (rpcs / queued_us per tenant)
+from :meth:`Network.tenant_stats`.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.core import CfsCluster, O_CREAT, O_RDONLY, O_TRUNC, O_WRONLY
+
+from .common import BenchResult, percentile, run_streams
+
+VICTIM_ITEMS = 24        # stat/open ops per victim proc (unique files)
+AGG_ITEMS = 12           # mkdirs per aggressor proc (mdtest DirCreation)
+
+
+def _make_cluster() -> CfsCluster:
+    # 3 meta nodes: every partition of BOTH volumes replicates on all
+    # three, so victim and noisy leaders (and raft legs) share NICs.
+    c = CfsCluster(n_meta=3, n_data=6,
+                   meta_mem_capacity=512 * 1024 * 1024,
+                   extent_max_size=8 * 1024 * 1024, seed=42)
+    c.create_volume("victim", n_meta_partitions=3, n_data_partitions=6)
+    c.create_volume("noisy", n_meta_partitions=3, n_data_partitions=6)
+    return c
+
+
+def _victim_streams(c: CfsCluster, clients: int, procs: int, items: int
+                    ) -> List[Tuple[str, object]]:
+    """stat/open streams over UNIQUE pre-created files: the setup mount
+    creates them so the victim clients' session caches stay cold and
+    every op pays its meta RPC on the shared leader NIC."""
+    setup = c.mount("victim", client_id="vsetup").vfs
+    setup.mkdir("/pool")
+    for ci in range(clients):
+        for pi in range(procs):
+            for i in range(items):
+                fd = setup.open(f"/pool/f{ci}_{pi}_{i}",
+                                O_WRONLY | O_CREAT | O_TRUNC)
+                setup.close(fd)
+    mounts = [c.mount("victim", client_id=f"v{i}").vfs
+              for i in range(clients)]
+
+    def ops(mnt, ci, pi):
+        def gen():
+            for i in range(items):
+                path = f"/pool/f{ci}_{pi}_{i}"
+                if i % 2:
+                    yield (lambda p=path, mnt=mnt:
+                           mnt.close(mnt.open(p, O_RDONLY)))
+                else:
+                    yield lambda p=path, mnt=mnt: mnt.stat(p)
+        return gen()
+
+    return [(f"v{ci}", ops(mnt, ci, pi))
+            for ci, mnt in enumerate(mounts) for pi in range(procs)]
+
+
+def _aggressor_streams(c: CfsCluster, clients: int, procs: int, items: int,
+                       out_mounts: List) -> List[Tuple[str, object]]:
+    """mdtest DirCreation on the noisy volume: clients × procs mkdir
+    bursts under a shared parent — several client machines so the
+    aggregate exceeds one FUSE daemon's pace and saturates the leaders."""
+    mounts = [c.mount("noisy", client_id=f"a{i}").vfs
+              for i in range(clients)]
+    out_mounts.extend(mounts)
+    mounts[0].mkdir("/agg")
+
+    def ops(mnt, ci, pi):
+        return (lambda i=i, ci=ci, pi=pi, mnt=mnt:
+                mnt.mkdir(f"/agg/d{ci}_{pi}_{i}") for i in range(items))
+
+    return [(f"a{ci}", ops(mnt, ci, pi))
+            for ci, mnt in enumerate(mounts) for pi in range(procs)]
+
+
+def bench_qos(smoke: bool) -> List[BenchResult]:
+    v_clients, v_procs = (1, 2) if smoke else (2, 8)
+    a_clients, a_procs = (2, 2) if smoke else (4, 16)    # 64 aggressor procs
+    v_items = 6 if smoke else VICTIM_ITEMS
+    a_items = 4 if smoke else AGG_ITEMS
+
+    rows: List[BenchResult] = []
+    iso_p99 = 0.0
+    cases = (("isolated", False, True),
+             ("cfs-qos", True, True),
+             ("cfs-noqos", True, False))
+    for label, contended, qos_on in cases:
+        c = _make_cluster()
+        c.net.qos = qos_on
+        victim = _victim_streams(c, v_clients, v_procs, v_items)
+        streams = list(victim)
+        agg_mounts: List = []
+        if contended:
+            streams += _aggressor_streams(c, a_clients, a_procs, a_items,
+                                          agg_mounts)
+        lat_by: List[List[float]] = []
+        r = run_streams("VictimStatOpen", label, c.net, streams,
+                        v_clients, v_procs, lat_by_stream=lat_by)
+        # victim-only tail: slice the victim streams out of the shared
+        # contended timeline (run_streams aggregated over every stream)
+        vlat = sorted(x for ls in lat_by[:len(victim)] for x in ls)
+        r.ops = len(vlat)
+        r.latency_us_per_op = sum(vlat) / max(len(vlat), 1)
+        r.p50_us = percentile(vlat, 0.50)
+        r.p95_us = percentile(vlat, 0.95)
+        r.p99_us = percentile(vlat, 0.99)
+        if not contended:
+            iso_p99 = r.p99_us
+        else:
+            ts = c.net.tenant_stats
+            r.extra = {
+                "p99_vs_isolated": r.p99_us / max(iso_p99, 1e-9),
+                "agg_clients": a_clients, "agg_procs": a_procs,
+                "agg_ops": a_clients * a_procs * a_items,
+                "victim_rpcs": ts.get("victim", {}).get("rpcs", 0),
+                "victim_queued_us": ts.get("victim", {}).get("queued_us",
+                                                             0.0),
+                "noisy_rpcs": ts.get("noisy", {}).get("rpcs", 0),
+                "noisy_queued_us": ts.get("noisy", {}).get("queued_us", 0.0),
+                "qos_sheds": sum(m.client.stats["qos_sheds"]
+                                 for m in agg_mounts),
+            }
+        rows.append(r)
+    return rows
+
+
+def run(out_rows: List[str], smoke: bool = False) -> List[dict]:
+    results = bench_qos(smoke)
+    out_rows.extend(r.row() for r in results)
+    return [r.json_obj() for r in results]

@@ -196,10 +196,54 @@ def meta_async_report(n_dirs: int = 64, barrier_every: int = 16) -> None:
           "raft round; un-barriered creates ride the window)\n")
 
 
+def qos_report() -> None:
+    """§QoS — per-volume NIC accounting under two-tenant contention: a
+    victim stat/open stream vs a noisy DirCreation burst on shared meta
+    nodes, with the WFQ/admission machinery on vs off.  Uses the
+    per-volume breakdown from :meth:`CfsClient.qos_volume_stats` and
+    names the offending tenant (dominant queued_us share)."""
+    from .common import percentile, run_streams
+    from .qos import _aggressor_streams, _make_cluster, _victim_streams
+
+    print("## §QoS — per-volume weighted fair queueing "
+          "(victim stat/open vs noisy DirCreation)\n")
+    print("| qos | volume | meta rpcs | queued µs | sheds | retries |"
+          " victim p99 µs |")
+    print("|---|---|---|---|---|---|---|")
+    offender, offender_q = "-", -1.0
+    for qos_on in (True, False):
+        c = _make_cluster()
+        c.net.qos = qos_on
+        victim = _victim_streams(c, 1, 4, 12)
+        agg_mounts: list = []
+        streams = victim + _aggressor_streams(c, 2, 8, 8, agg_mounts)
+        lat_by: list = []
+        run_streams("QosReport", "cfs", c.net, streams, 3, 8,
+                    lat_by_stream=lat_by)
+        vlat = sorted(x for ls in lat_by[:len(victim)] for x in ls)
+        p99 = percentile(vlat, 0.99)
+        per = agg_mounts[0].client.qos_volume_stats()
+        for m in agg_mounts[1:]:       # fold every aggressor client's sheds
+            per["noisy"]["sheds"] += m.client.stats["qos_sheds"]
+            per["noisy"]["retries"] += m.client.stats["qos_shed_retries"]
+        label = "on" if qos_on else "off"
+        for vol in sorted(per):
+            s = per[vol]
+            if not qos_on and s["queued_us"] > offender_q:
+                offender, offender_q = vol, s["queued_us"]
+            p99c = f"{p99:.1f}" if vol == "victim" else "-"
+            print(f"| {label} | {vol} | {s['rpcs']} | {s['queued_us']:.0f} |"
+                  f" {s['sheds']} | {s['retries']} | {p99c} |")
+    print(f"\noffending tenant (dominant queued µs with qos off): "
+          f"**{offender}** — WFQ pins the victim's tail at its isolated "
+          "baseline while the offender pays the queueing it causes\n")
+
+
 def main() -> None:
     meta_batch_report()
     meta_session_report()
     meta_async_report()
+    qos_report()
     final = analyze_dir(ROOT / "dryrun")
     base = analyze_dir(ROOT / "dryrun_baseline")
 

@@ -27,10 +27,11 @@ RESULTS = ROOT / "results" / "bench"
 
 
 def run_suite(name: str, rows: list, smoke: bool) -> list:
-    from . import dataloader, expansion, hotset, largefile, mdtest, smallfile
+    from . import (dataloader, expansion, hotset, largefile, mdtest, qos,
+                   smallfile)
     mod = {"mdtest": mdtest, "largefile": largefile,
            "smallfile": smallfile, "expansion": expansion,
-           "hotset": hotset, "dataloader": dataloader}[name]
+           "hotset": hotset, "dataloader": dataloader, "qos": qos}[name]
     return mod.run(rows, smoke=smoke)
 
 
@@ -63,7 +64,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
                     choices=["all", "mdtest", "largefile", "smallfile",
-                             "expansion", "hotset", "dataloader",
+                             "expansion", "hotset", "dataloader", "qos",
                              "roofline"])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny op counts (<30 s total) for CI drift checks")
@@ -71,7 +72,7 @@ def main() -> None:
     RESULTS.mkdir(parents=True, exist_ok=True)
 
     suites = (["mdtest", "largefile", "smallfile", "expansion", "hotset",
-               "dataloader", "roofline"]
+               "dataloader", "qos", "roofline"]
               if args.suite == "all" else [args.suite])
     from .common import HEADER
     for suite in suites:

@@ -118,6 +118,18 @@ _DECLS = [
          "Insert committed append/small-write packets into the cache",
          "read-only fills (write path leaves the cache untouched)",
          "repro.cache.extent_cache", 9),
+    Knob("CFS_QOS", "1", "bool",
+         "Per-volume QoS: WFQ meta-NIC scheduling + data-node admission",
+         "seed FIFO scheduling and no admission (byte-identical baselines)",
+         "repro.core.simnet", 10),
+    Knob("CFS_QOS_WEIGHTS", "", "str",
+         "Per-volume WFQ weights, e.g. 'volA=4,volB=1' (unlisted weigh 1)",
+         "empty: every volume weighs 1 (equal shares)",
+         "repro.core.simnet", 10),
+    Knob("CFS_QOS_ADMIT_US", "4000", "float",
+         "Max per-tenant virtual queue (µs) a data node admits before Busy",
+         "admission control off (data nodes never shed)",
+         "repro.core.data_node", 10),
 ]
 
 KNOBS: Dict[str, Knob] = {k.name: k for k in _DECLS}

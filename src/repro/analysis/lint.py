@@ -26,6 +26,10 @@ Checkers (all pluggable via :data:`CHECKERS`):
   and the two sanctioned funnels: client metadata mutations MUST go through
   ``CfsClient._meta_propose`` so the ``note_mutation`` cache-invalidation
   hook fires (a bypass silently serves stale entries for up to one TTL).
+* ``direct-resource`` — ``Resource``/``WfqResource`` construction in server
+  scope (``repro.core`` outside ``simnet``): service queues must come from
+  ``Network.resource()`` so QoS-registered NICs get the tenant-tagged WFQ
+  variant and ``reset_accounting`` resets them with the timeline.
 * ``fork-unjoined-blocking`` — calling a blocking client helper
   (``drain_window``/``sync_partitions``/``evict_orphans``/``fsync``) between
   an ``OpTimer.fork()`` and its ``join()``: the helper advances the op
@@ -365,6 +369,40 @@ class DirectProposeChecker(Checker):
         return v.findings
 
 
+class DirectResourceChecker(Checker):
+    name = "direct-resource"
+    # Service queues in server scope must come from Network.resource(),
+    # which routes QoS-registered NICs through the tenant-tagged WFQ
+    # variant (PR 10).  A hand-built Resource bypasses per-volume
+    # scheduling AND reset_accounting's timeline reset.  simnet itself is
+    # the factory; WfqResource subclasses Resource there.
+    exempt_modules = ("repro.core.simnet",)
+
+    def applies(self, module: str) -> bool:
+        return module.startswith("repro.core") and \
+            not module.startswith(self.exempt_modules)
+
+    def check(self, module, tree):
+        rule = self.name
+
+        class V(_ScopedVisitor):
+            def visit_Call(self, node):
+                f = node.func
+                name = f.id if isinstance(f, ast.Name) else \
+                    (f.attr if isinstance(f, ast.Attribute) else None)
+                if name in ("Resource", "WfqResource"):
+                    self.add(rule, node,
+                             f"direct {name}() construction in server scope "
+                             "— obtain service queues via Network.resource() "
+                             "so QoS-registered NICs get the tenant-tagged "
+                             "WFQ variant and reset_accounting covers them")
+                self.generic_visit(node)
+
+        v = V(module)
+        v.visit(tree)
+        return v.findings
+
+
 class ForkBlockingChecker(Checker):
     name = "fork-unjoined-blocking"
 
@@ -444,6 +482,7 @@ CHECKERS: List[Checker] = [
     EnvKnobChecker(),
     UnregisteredKnobChecker(),
     DirectProposeChecker(),
+    DirectResourceChecker(),
     ForkBlockingChecker(),
 ]
 

@@ -49,6 +49,7 @@ from typing import Any, Dict, List, Optional, Tuple
 from ..analysis import knobs
 from ..analysis import sanitizer as _san
 from ..cache.extent_cache import TieredExtentCache
+from .data_node import Busy
 from .extent_store import ExtentError
 from .meta_node import (DentryExists, MetaError, NoSuchDentry, NoSuchInode,
                         PartitionFull, RangeExhausted, WrongRange)
@@ -301,7 +302,10 @@ class CfsClient:
                       # ---- split-aware routing counters ----
                       "wrong_range_redirects": 0,
                       # ---- tiered extent-cache counters ----
-                      "data_cache_hits": 0, "data_cache_misses": 0}
+                      "data_cache_hits": 0, "data_cache_misses": 0,
+                      # ---- multi-tenant QoS counters (CFS_QOS) ----
+                      "qos_sheds": 0, "qos_shed_retries": 0,
+                      "qos_backoff_us": 0.0}
         # lease/version session over the inode/dentry caches (TTL knobs
         # CFS_META_TTL / CFS_META_NEG_TTL; ttl 0 = seed sync-on-open)
         from .meta_session import MetaSession
@@ -317,6 +321,37 @@ class CfsClient:
         self.sync_window_us = SYNC_WINDOW_US
         self._last_sync_us: Optional[float] = None
         self.sync_partitions(force=True)
+
+    # ------------------------------------------------------------ QoS tenant
+    def _tag(self) -> None:
+        """Stamp the current op with this client's ``(volume, client)``
+        tenant at the RPC funnels.  Sub-ops inherit the tag through
+        ``Network.begin_op`` and fork branches share the OpTimer, so one
+        stamp covers the whole call tree — the benchmark's outer op is
+        opened by the driver, which knows nothing about volumes."""
+        op = self.net.current_op
+        if op is not None and op.tenant is None:
+            op.tenant = (self.volume, self.client_id)
+
+    def qos_volume_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-volume QoS breakdown: timed RPCs and absorbed queueing per
+        tenant volume (from the network's attribution ledger, shared by
+        every client on the cluster) merged with this client's shed/backoff
+        counters, attributed to its own volume.  Refreshed into
+        ``stats["per_volume"]`` so benchmark dumps and ``qos_report`` can
+        name the offending tenant, not just the saturated resource."""
+        per: Dict[str, Dict[str, float]] = {}
+        for vol in sorted(self.net.tenant_stats):
+            ts = self.net.tenant_stats[vol]
+            per[vol] = {"rpcs": ts["rpcs"],
+                        "queued_us": round(ts["queued_us"], 3),
+                        "sheds": 0, "retries": 0}
+        mine = per.setdefault(self.volume, {"rpcs": 0, "queued_us": 0.0,
+                                            "sheds": 0, "retries": 0})
+        mine["sheds"] = self.stats["qos_sheds"]
+        mine["retries"] = self.stats["qos_shed_retries"]
+        self.stats["per_volume"] = per
+        return per
 
     # ------------------------------------------------------------------ RM
     def sync_partitions(self, force: bool = False,
@@ -340,6 +375,7 @@ class CfsClient:
         that bounds a post-split burst of redirects across many procs to
         ONE RM exchange per client.  Otherwise the fetch bypasses the
         window (it is a recovery path) but still stamps ``_last_sync_us``."""
+        self._tag()
         op = self.net.current_op
         now = op.now_us if op is not None and op.timed else None
         if min_epoch is not None:
@@ -476,6 +512,7 @@ class CfsClient:
         oldest in-flight EARLY ack; durability barriers
         (:meth:`drain_meta_window`) wait on the background-commit
         high-water instead."""
+        self._tag()
         gid = f"mp{mp.pid}"
         order = self._replica_order(gid, mp.replicas)
         last_err: Exception = NotFound(gid)
@@ -590,6 +627,7 @@ class CfsClient:
         returns the session envelope (value + partition mvcc + TTL grant);
         ``reply_bytes`` sizes the reply on the wire — ``stat_version``
         replies are a fraction of a full inode refetch."""
+        self._tag()
         gid = f"mp{mp.pid}"
         order = self._read_order(gid, mp.replicas)
         last_err: Exception = NotFound(gid)
@@ -676,6 +714,7 @@ class CfsClient:
         cache entry costs a NAK round-trip before the hint redirects —
         which is why read-serving replicas must never land in
         ``leader_cache``."""
+        self._tag()
         gid = f"dp{dp.pid}"
         queue = self._replica_order(gid, dp.replicas)
         last_err: Exception = NotFound(gid)
@@ -1162,6 +1201,7 @@ class CfsClient:
             packet = data[pos : pos + PACKET_SIZE]
             dp = self._dp(pid)
             pkt_op: Optional[Any] = None
+            shed: Optional[Busy] = None
             if pipelined:
                 send_at = op.now_us
                 if len(window) >= self.pipeline_depth:
@@ -1173,6 +1213,11 @@ class CfsClient:
                 res = self._data_call(dp, "serve_append", eid, eoff, packet,
                                       True, nbytes=len(packet) + 128)
                 accepted = res.accepted
+            except Busy as e:
+                # admission NAK (CFS_QOS): transient overload, handled below
+                # without the RO-reporting failure machinery
+                accepted = 0
+                shed = e
             except ExtentError as e:
                 if "full" in str(e):
                     # extent reached its size cap — healthy; roll to a fresh
@@ -1213,6 +1258,24 @@ class CfsClient:
                         f"append made no progress after {zero_progress} "
                         f"partition switches (committed {pos}/{len(data)})")
             if accepted < len(packet):
+                if shed is not None:
+                    # Busy shed: back off by the NAK's hint and re-route the
+                    # retry to another partition.  No report_timeout — the
+                    # partition is healthy, just protecting another tenant's
+                    # share, and marking it RO would turn transient overload
+                    # into a permanent fault.  The async-meta unacked windows
+                    # stay parked untouched across the shed (PR 7 durability
+                    # contract): only the data window above was drained.
+                    self.stats["qos_sheds"] += 1
+                    self.stats["qos_shed_retries"] += 1
+                    self.stats["qos_backoff_us"] += shed.retry_after_us
+                    if op is not None and op.timed:
+                        op.add(shed.retry_after_us)
+                    dp = self._pick_dp()
+                    pid = dp.pid
+                    eid = self._new_extent_id(dp)
+                    eoff = 0
+                    continue
                 # partial/failed commit: mark RO via RM and move to a fresh
                 # extent on another partition for the remaining bytes
                 try:
@@ -1245,6 +1308,16 @@ class CfsClient:
             try:
                 eid, off, committed = self._data_call(
                     dp, "serve_small_write", data, nbytes=len(data) + 128)
+            except Busy as e:
+                # admission NAK: transient, not a fault — back off by the
+                # hint and retry on another partition without reporting RO
+                self.stats["qos_sheds"] += 1
+                self.stats["qos_shed_retries"] += 1
+                self.stats["qos_backoff_us"] += e.retry_after_us
+                op = self.net.current_op
+                if op is not None and op.timed:
+                    op.add(e.retry_after_us)
+                continue
             except (NetError, FsError, ExtentError):
                 # replica-local RO/failure: report so the RM flips the hard
                 # status (and expands the volume if needed), then retry
@@ -1451,10 +1524,20 @@ class CfsClient:
 
     def _serve_read_call(self, dp: _DataPartition, nid: str, eid: int,
                          eoff: int, size: int) -> bytes:
-        return self.net.call(
-            self.client_id, nid, self.data_nodes[nid].serve_read,
-            dp.pid, eid, eoff, size,
-            nbytes=128, reply_bytes=size + 64, kind="client.data")
+        self._tag()
+        try:
+            return self.net.call(
+                self.client_id, nid, self.data_nodes[nid].serve_read,
+                dp.pid, eid, eoff, size,
+                nbytes=128, reply_bytes=size + 64, kind="client.data")
+        except Busy as e:
+            # admission NAK on a read: the caller's failover machinery
+            # re-routes to the next replica in the group (hint-following),
+            # so every read shed is also a re-route attempt
+            self.stats["qos_sheds"] += 1
+            self.stats["qos_shed_retries"] += 1
+            self.stats["qos_backoff_us"] += e.retry_after_us
+            raise
 
     def _read_one(self, dp: _DataPartition, eid: int, eoff: int,
                   size: int, hedge_us: Optional[float] = None) -> bytes:
@@ -1479,7 +1562,7 @@ class CfsClient:
             self.net.begin_op()         # untimed sub-op measures the cost
             try:
                 d = self._serve_read_call(dp, nid, eid, eoff, size)
-            except (NetError, ExtentError) as e:
+            except (NetError, ExtentError, Busy) as e:
                 last_err = e
                 self.net.end_op()
                 continue
@@ -1533,7 +1616,7 @@ class CfsClient:
                 attempts.append((pkt.now_us, 0, order[0], d))
                 self.stats["data_calls"] += 1
                 fork.branch_done()
-            except (NetError, ExtentError) as e:
+            except (NetError, ExtentError, Busy) as e:
                 last_err = e
                 t_fail = pkt.now_us          # the NAK's arrival time
                 fork.branch_done(record=False)
@@ -1553,7 +1636,7 @@ class CfsClient:
                     attempts.append((pkt.now_us, 1, order[1], d))
                     self.stats["data_calls"] += 1
                     fork.branch_done()
-                except (NetError, ExtentError) as e:
+                except (NetError, ExtentError, Busy) as e:
                     last_err = e
                     t_fail = max(t_fail, pkt.now_us)
                     fork.branch_done(record=False)
@@ -1568,7 +1651,7 @@ class CfsClient:
                         attempts.append((pkt.now_us, idx, nid, d))
                         self.stats["data_calls"] += 1
                         break
-                    except (NetError, ExtentError) as e:
+                    except (NetError, ExtentError, Busy) as e:
                         last_err = e
         finally:
             self.net.end_op()

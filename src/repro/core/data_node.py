@@ -26,6 +26,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
+from ..analysis import knobs
 from ..analysis import sanitizer as _san
 from .extent_store import ExtentError, ExtentStore
 from .multiraft import MultiRaftHost
@@ -33,7 +34,26 @@ from .raft import NotCommitted, NotLeader, StateMachine
 from .simnet import Disk, NetError, Network, OpTimer
 from .types import PACKET_SIZE
 
-__all__ = ["DataNode", "DataPartitionReplica", "PartitionStatus", "WriteResult"]
+__all__ = ["Busy", "DataNode", "DataPartitionReplica", "PartitionStatus",
+           "WriteResult"]
+
+# admission bound (CFS_QOS_ADMIT_US): the most virtual queue, in µs, a data
+# node accepts from one tenant volume while another tenant is active before
+# NAKing with Busy.  Module-level so tests can monkeypatch it.
+QOS_ADMIT_US = knobs.get_float("CFS_QOS_ADMIT_US")
+
+
+class Busy(Exception):
+    """Admission-control NAK (CFS_QOS): this node's virtual queue for the
+    calling tenant's volume is over the ``CFS_QOS_ADMIT_US`` bound while
+    another tenant is active.  ``retry_after_us`` hints when the backlog
+    drains below the bound; the client backs off and re-routes the retry
+    to another replica/partition instead of piling onto this queue."""
+
+    def __init__(self, node_id: str, retry_after_us: float):
+        super().__init__(f"{node_id} busy; retry in {retry_after_us:.0f}us")
+        self.node_id = node_id
+        self.retry_after_us = retry_after_us
 
 
 class PartitionStatus:
@@ -290,10 +310,55 @@ class DataNode:
         self.partitions: Dict[int, DataPartitionReplica] = {}
         self.raft_host = MultiRaftHost(node_id, net, raft_registry)
         self.zone = zone  # raft set (§2.5.1)
+        # per-volume admission ledger: volume -> virtual time its accepted
+        # backlog on this node drains (CFS_QOS admission control); stamped
+        # with the network's timeline epoch so a reset_accounting() (new
+        # virtual timeline) drops entries parked in the old clock's future
+        self._admit_until: Dict[str, float] = {}
+        self._admit_epoch = net.timeline_epoch
+        self.sheds = 0
         registry[node_id] = self
 
     def op(self) -> Optional[OpTimer]:
         return self.net.current_op
+
+    def _admit(self, cost_us: float) -> None:
+        """Per-tenant admission control at the leader RPC entry points.
+
+        Bounds the virtual queue this node accepts per volume: while
+        another tenant is active here, a request that would push its
+        volume's backlog past ``CFS_QOS_ADMIT_US`` is NAKed with
+        :class:`Busy` (the NAK still pays a reply round in ``_timed_call``)
+        instead of being buried in the queue.  With a single tenant — or
+        untimed/untagged ops — this is pure bookkeeping and never sheds,
+        which keeps every single-volume baseline byte-identical.  Chain
+        legs (``chain_append``/``chain_small``) are never admission-checked:
+        a mid-chain shed would fork the replication chain."""
+        net = self.net
+        if not net.qos or QOS_ADMIT_US <= 0:
+            return
+        op = net.current_op
+        if op is None or not op.timed or op.tenant is None:
+            return
+        vol = op.tenant[0]
+        now = op.now_us
+        ledger = self._admit_until
+        if self._admit_epoch != net.timeline_epoch:
+            ledger.clear()
+            self._admit_epoch = net.timeline_epoch
+        for v in [v for v, until in ledger.items() if until <= now]:
+            del ledger[v]
+        projected = max(ledger.get(vol, now), now) + cost_us
+        foreign = max((until for v, until in ledger.items() if v != vol),
+                      default=now)
+        if foreign > now and projected - now > QOS_ADMIT_US:
+            self.sheds += 1
+            # the hint must cover the cross-tenant pressure horizon, not
+            # just this volume's own drain — a shorter hint would bounce
+            # the client straight back into the same NAK
+            retry = max(projected - now - QOS_ADMIT_US, foreign - now)
+            raise Busy(self.node_id, retry)
+        ledger[vol] = projected
 
     # ---- partition lifecycle -------------------------------------------------
     def add_partition(self, partition_id: int, volume: str, replicas: List[str],
@@ -320,11 +385,13 @@ class DataNode:
 
     def serve_read(self, partition_id: int, extent_id: int, offset: int,
                    size: int, verify_crc: bool = False) -> bytes:
+        self._admit(self.net.model.disk_cost(size))
         return self.partitions[partition_id].read(extent_id, offset, size,
                                                   verify_crc=verify_crc)
 
     def serve_append(self, partition_id: int, extent_id: int, offset: int,
                      data: bytes, create: bool = False) -> WriteResult:
+        self._admit(self.net.model.disk_cost(len(data)))
         return self.partitions[partition_id].leader_append(
             extent_id, offset, data, create=create)
 
@@ -334,6 +401,7 @@ class DataNode:
             extent_id, offset, data)
 
     def serve_small_write(self, partition_id: int, data: bytes) -> Tuple[int, int, int]:
+        self._admit(self.net.model.disk_cost(len(data)))
         return self.partitions[partition_id].leader_small_write(data)
 
     def chain_small(self, partition_id: int, extent_id: int, offset: int,

@@ -491,6 +491,10 @@ class MetaNode:
         # mutations: {"mvcc", "ack_us", "commit_us"} — drain latency is
         # commit_us - ack_us (reported by benchmarks/report.py)
         self.journal: Dict[int, List[Dict[str, float]]] = {}
+        # meta-leader NICs schedule per-volume WFQ flows (CFS_QOS): every
+        # proposal / leased read lands in its volume's flow instead of one
+        # shared FIFO, so a single tenant's burst cannot starve the rest
+        net.register_qos_nic(f"nic:{node_id}")
         registry[node_id] = self
 
     # ---- partition lifecycle ---------------------------------------------------

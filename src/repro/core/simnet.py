@@ -37,12 +37,14 @@ import random
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Set, Tuple
 
+from ..analysis import knobs
 from ..analysis import sanitizer as _san
 
 __all__ = [
     "SimClock",
     "EventScheduler",
     "Resource",
+    "WfqResource",
     "NetError",
     "NodeDown",
     "Partitioned",
@@ -166,9 +168,12 @@ class Resource:
         """End of the last scheduled busy interval (diagnostics)."""
         return self._ends[-1] if self._ends else 0.0
 
-    def acquire(self, t_arrive: float, service_us: float) -> float:
+    def acquire(self, t_arrive: float, service_us: float,
+                tenant: Optional[Tuple[str, str]] = None) -> float:
         """Occupy the server for ``service_us`` starting no earlier than
-        ``t_arrive``; returns the departure time."""
+        ``t_arrive``; returns the departure time.  ``tenant`` is accepted
+        (and ignored) so call sites can pass the op's flow unconditionally;
+        only :class:`WfqResource` schedules by it."""
         self.jobs += 1
         self.busy_us += service_us
         if service_us <= 0:
@@ -202,6 +207,152 @@ class Resource:
         self.busy_us = 0.0
         self.queued_us = 0.0
         self.jobs = 0
+
+
+def parse_qos_weights(spec: str) -> Dict[str, float]:
+    """Parse a ``CFS_QOS_WEIGHTS`` spec ("volA=4,volB=1") into a weight
+    map; unlisted volumes weigh 1.0, malformed entries are skipped."""
+    out: Dict[str, float] = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        name, _, w = part.partition("=")
+        try:
+            out[name.strip()] = max(float(w), 1e-9)
+        except ValueError:
+            continue
+    return out
+
+
+# WFQ fairness accounting window: per-flow share budgets reset every
+# epoch, and a flow idle for a full epoch stops counting as a competitor
+QOS_EPOCH_US = 500.0
+
+
+class WfqResource(Resource):
+    """Weighted-fair-queueing variant of :class:`Resource`: per-tenant
+    flows keyed by volume (``CFS_QOS``).
+
+    Single-flow traffic delegates verbatim to the FIFO earliest-fit
+    machinery, so a run where every job carries the same tenant (or none)
+    is byte-identical to a plain :class:`Resource` — that is what keeps
+    every single-volume baseline unchanged with QoS on.
+
+    With two or more recently-active flows, each flow's service budget
+    per :data:`QOS_EPOCH_US` window is its weighted share ``w / W``:
+
+    * A flow **under budget** is exactly the flow WFQ would serve next
+      (smallest virtual finish time).  The FIFO backlog ahead of it was
+      already booked with committed departure times, so the preemption
+      is modelled as a private lane at full rate: the job books
+      earliest-fit on the flow's own interval list, so concurrent
+      streams of one volume still serialize on the single server while
+      out-of-order arrivals (ops book at their own op-clock times) fill
+      lane gaps exactly like the seed scheduler.
+    * A flow **over budget** keeps the real earliest-fit booking (work
+      stays on the interval list) but is paced by its virtual-finish
+      frontier: each job floors at ``flow_pace[f]`` and advances it by
+      ``service * W / w`` — the canonical WFQ finish-tag increment — so
+      a bursting tenant converges to its weighted share and leaves gaps
+      the other flows' bookings (and the light lane) ride in.
+
+    Work conservation: a competitor idle for a full epoch is pruned, and
+    the surviving flow re-enters the plain FIFO path, backfilling the
+    leftover capacity via ordinary earliest-fit."""
+
+    __slots__ = ("net", "flow_lane", "flow_pace", "flow_epoch", "flow_used",
+                 "flow_booked", "flow_jobs", "flow_busy_us",
+                 "flow_queued_us")
+
+    def __init__(self, name: str, net: "Network"):
+        super().__init__(name)
+        self.net = net
+        self.flow_lane: Dict[str, Resource] = {}  # light-lane intervals
+        self.flow_pace: Dict[str, float] = {}     # heavy-lane VFT frontier
+        self.flow_epoch: Dict[str, int] = {}      # last arrival epoch
+        self.flow_used: Dict[str, float] = {}     # service used this epoch
+        self.flow_booked: Dict[str, float] = {}   # main-list booked frontier
+        self.flow_jobs: Dict[str, int] = {}
+        self.flow_busy_us: Dict[str, float] = {}
+        self.flow_queued_us: Dict[str, float] = {}
+
+    def _weight(self, flow: str) -> float:
+        return self.net.qos_weights.get(flow, 1.0)
+
+    def acquire(self, t_arrive: float, service_us: float,
+                tenant: Optional[Tuple[str, str]] = None) -> float:
+        if tenant is None or not self.net.qos:
+            return super().acquire(t_arrive, service_us)
+        flow = tenant[0]
+        epoch = int(t_arrive // QOS_EPOCH_US)
+        epochs = self.flow_epoch
+        booked = self.flow_booked
+        # a flow competes while it arrived recently OR still owns booked
+        # backlog on the main interval list ahead of this arrival; flows
+        # with neither are pruned
+        for f in [f for f, fe in epochs.items()
+                  if fe < epoch - 1 and booked.get(f, 0.0) <= t_arrive]:
+            del epochs[f]
+            self.flow_used.pop(f, None)
+            self.flow_pace.pop(f, None)
+            self.flow_lane.pop(f, None)
+            booked.pop(f, None)
+        others_w = sum(self._weight(f) for f in epochs if f != flow)
+        if epochs.get(flow) != epoch:
+            epochs[flow] = epoch
+            self.flow_used[flow] = 0.0           # budget resets per window
+        self.flow_jobs[flow] = self.flow_jobs.get(flow, 0) + 1
+        self.flow_busy_us[flow] = self.flow_busy_us.get(flow, 0.0) + service_us
+        used = self.flow_used[flow]
+        self.flow_used[flow] = used + service_us
+        if others_w <= 0.0:
+            # alone on the queue: the seed FIFO path, verbatim
+            end = super().acquire(t_arrive, service_us)
+            booked[flow] = max(booked.get(flow, 0.0), end)
+            self.flow_queued_us[flow] = self.flow_queued_us.get(flow, 0.0) \
+                + max(0.0, end - t_arrive - service_us)
+            return end
+        w = self._weight(flow)
+        share = w / (w + others_w)
+        if used + service_us <= QOS_EPOCH_US * share:
+            # under its share: WFQ serves this job ahead of the heavy
+            # backlog (whose departures are already committed) — book it
+            # earliest-fit on the flow's private lane at full rate
+            lane = self.flow_lane.get(flow)
+            if lane is None:
+                lane = self.flow_lane[flow] = Resource(f"{self.name}/{flow}")
+            end = lane.acquire(t_arrive, service_us)
+            self.jobs += 1
+            self.busy_us += service_us
+            queued = max(0.0, end - t_arrive - service_us)
+            self.queued_us += queued
+            self.flow_queued_us[flow] = \
+                self.flow_queued_us.get(flow, 0.0) + queued
+            return end
+        # over its share: real earliest-fit booking, floored at the flow's
+        # virtual-finish frontier which advances by service/share — the
+        # burst converges to w/W of the server
+        floor = max(t_arrive, self.flow_pace.get(flow, t_arrive))
+        end = super().acquire(floor, service_us)
+        booked[flow] = max(booked.get(flow, 0.0), end)
+        self.flow_pace[flow] = max(self.flow_pace.get(flow, t_arrive),
+                                   t_arrive) + service_us / share
+        self.queued_us += floor - t_arrive
+        self.flow_queued_us[flow] = self.flow_queued_us.get(flow, 0.0) \
+            + max(0.0, end - t_arrive - service_us)
+        return end
+
+    def reset(self) -> None:
+        super().reset()
+        self.flow_lane.clear()
+        self.flow_pace.clear()
+        self.flow_epoch.clear()
+        self.flow_used.clear()
+        self.flow_booked.clear()
+        self.flow_jobs.clear()
+        self.flow_busy_us.clear()
+        self.flow_queued_us.clear()
 
 
 @dataclass
@@ -250,10 +401,16 @@ class OpTimer:
     the max of the branches via ``parallel()`` or a ``fork()``.
     """
 
-    def __init__(self, start_us: float = 0.0, timed: bool = False) -> None:
+    def __init__(self, start_us: float = 0.0, timed: bool = False,
+                 tenant: Optional[Tuple[str, str]] = None) -> None:
         self.start_us: float = start_us
         self.now_us: float = start_us
         self.timed = timed
+        # (volume, client) flow identity for QoS scheduling; sub-ops inherit
+        # it from the enclosing op in ``Network.begin_op`` and fork branches
+        # share the OpTimer, so one tag at the client RPC funnel covers the
+        # whole call tree
+        self.tenant: Optional[Tuple[str, str]] = tenant
         self.msgs: int = 0
         self.bytes: int = 0
         self.disk_ops: int = 0
@@ -433,6 +590,18 @@ class Network:
         # FIFO service queues, created on demand: "nic:<node>", "disk:<node>",
         # "fuse:<client>" — the discrete-event engine's shared state
         self.resources: Dict[str, Resource] = {}
+        # ---- multi-tenant QoS (PR 10) ----
+        # CFS_QOS=0 keeps the seed FIFO path byte-identical; weights come
+        # from CFS_QOS_WEIGHTS ("volA=4,volB=1", unlisted volumes weigh 1)
+        self.qos: bool = knobs.get_bool("CFS_QOS")
+        self.qos_weights: Dict[str, float] = \
+            parse_qos_weights(knobs.get_str("CFS_QOS_WEIGHTS"))
+        # resource names scheduled by WfqResource (meta-leader NICs register
+        # themselves at node construction)
+        self.qos_nics: Set[str] = set()
+        # volume -> {"rpcs", "queued_us"} over timed, tenant-tagged RPCs:
+        # the attribution substrate for per-volume client stats
+        self.tenant_stats: Dict[str, Dict[str, float]] = {}
         # monotonic timeline epoch, bumped by reset_accounting(): virtual
         # times parked across a reset (e.g. async-commit ack windows held by
         # clients) belong to the OLD timeline and must not advance ops on
@@ -443,8 +612,21 @@ class Network:
     def resource(self, name: str) -> Resource:
         res = self.resources.get(name)
         if res is None:
-            res = self.resources[name] = Resource(name)
+            if name in self.qos_nics:
+                res = self.resources[name] = WfqResource(name, self)
+            else:
+                res = self.resources[name] = Resource(name)
         return res
+
+    def register_qos_nic(self, name: str) -> None:
+        """Route this NIC's service queue through the per-tenant WFQ
+        variant.  Meta nodes register at construction — before traffic —
+        so the eager swap below only ever replaces an idle resource."""
+        self.qos_nics.add(name)
+        res = self.resources.get(name)
+        if res is not None and not isinstance(res, WfqResource) \
+                and res.jobs == 0:
+            self.resources[name] = WfqResource(name, self)
 
     def charge_busy(self, node: str, us: float) -> None:
         self.busy_us[node] = self.busy_us.get(node, 0.0) + us
@@ -452,6 +634,7 @@ class Network:
     def reset_accounting(self) -> None:
         self.busy_us.clear()
         self.stats = NetStats()
+        self.tenant_stats.clear()
         self.timeline_epoch += 1
         for res in self.resources.values():
             res.reset()
@@ -480,11 +663,17 @@ class Network:
             self.slow_nodes[node_id] = extra_us
 
     # ---- op context -----------------------------------------------------
-    def begin_op(self, at: Optional[float] = None) -> OpTimer:
+    def begin_op(self, at: Optional[float] = None,
+                 tenant: Optional[Tuple[str, str]] = None) -> OpTimer:
         """Open an op context.  ``at=None`` (the seed behaviour) gives an
         additive, queue-blind timer; ``at=t`` gives a *timed* op whose RPCs
-        and disk IO queue on per-node resources starting at virtual time t."""
-        op = OpTimer(start_us=at or 0.0, timed=at is not None)
+        and disk IO queue on per-node resources starting at virtual time t.
+        ``tenant=None`` inherits the enclosing op's ``(volume, client)``
+        flow, so nested sub-ops (pipelined packets, async-commit raft
+        rounds, readahead) stay in their volume's QoS flow."""
+        if tenant is None and self._op_stack:
+            tenant = self._op_stack[-1].tenant
+        op = OpTimer(start_us=at or 0.0, timed=at is not None, tenant=tenant)
         if _san.SAN is not None:
             _san.SAN.on_begin_op(op)
         self._op_stack.append(op)
@@ -562,13 +751,24 @@ class Network:
         service = self.cpu_cost_us + nbytes / bw
         self.charge_busy(dst, service)
         # 1. the request occupies the source's own NIC until fully sent
-        t = self.resource(f"nic:{src}").acquire(op.now_us, nbytes / bw)
+        t = self.resource(f"nic:{src}").acquire(op.now_us, nbytes / bw,
+                                                tenant=op.tenant)
         if op._depth == 0:
             # outermost request: a pipelined sender may continue from here
             op.tx_done_us = t
-        # 2. propagation, then FIFO service at the destination NIC
-        t = self.resource(f"nic:{dst}").acquire(t + prop, service)
+        # 2. propagation, then service at the destination NIC (FIFO, or the
+        #    volume's WFQ flow when the NIC is QoS-registered)
+        t_req = t + prop
+        t = self.resource(f"nic:{dst}").acquire(t_req, service,
+                                                tenant=op.tenant)
         op.now_us = t
+        if op.tenant is not None:
+            ts = self.tenant_stats.setdefault(
+                op.tenant[0], {"rpcs": 0, "queued_us": 0.0})
+            ts["rpcs"] += 1
+            wait = t - t_req - service
+            if wait > 0:
+                ts["queued_us"] += wait
         # 3. the handler runs at the service point; its own calls and disk
         #    IO advance the frontier further
         op._depth += 1
@@ -580,14 +780,15 @@ class Network:
             op._depth -= 1
             self.stats.record(dst, src, 64, kind + ".err")
             op.now_us = self.resource(f"nic:{dst}").acquire(
-                op.now_us, 64 / bw) + prop
+                op.now_us, 64 / bw, tenant=op.tenant) + prop
             op.msgs += 2
             op.bytes += nbytes + 64
             raise
         op._depth -= 1
         # 4. reply: dst NIC transmit + propagation back
         self.stats.record(dst, src, reply_bytes, kind + ".reply")
-        t = self.resource(f"nic:{dst}").acquire(op.now_us, reply_bytes / bw)
+        t = self.resource(f"nic:{dst}").acquire(op.now_us, reply_bytes / bw,
+                                                tenant=op.tenant)
         op.now_us = t + prop
         op.msgs += 2
         op.bytes += nbytes + reply_bytes

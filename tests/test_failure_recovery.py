@@ -203,6 +203,61 @@ def test_async_crash_after_barrier_keeps_barriered_ops(cluster):
                           report.nlink_drift)
 
 
+def test_crash_after_shed_replays_parked_window(cluster, monkeypatch):
+    """QoS (PR 10) x async commits (PR 7): a data-node Busy NAK mid-burst
+    must PARK the unacked metadata window, not drop it — the shed-retry
+    drain takes no report_timeout/sync detour that would discard acked
+    mutations.  Pin: shed during an early-acked mkdir burst, then kill
+    the meta leader; the replayed tree holds every acked mutation and
+    fsck is clean."""
+    import repro.core.data_node as data_node
+    monkeypatch.setattr(data_node, "QOS_ADMIT_US", 1.0)
+    cluster.create_volume("w", n_meta_partitions=3, n_data_partitions=6)
+    # a competing tenant holds every data node's admission ledger for the
+    # whole burst window (stamped directly: the organic shed mechanics are
+    # covered in test_qos.py — this test pins the window-parking contract)
+    wm = cluster.mount("w")
+    op = cluster.net.begin_op(at=0.0)
+    try:
+        wm.write_file("/w.bin", b"w" * 4096)
+    finally:
+        cluster.net.end_op()
+    for d in cluster.data_nodes.values():
+        d._admit_epoch = cluster.net.timeline_epoch
+        d._admit_until["w"] = 20000.0
+    mnt = cluster.mount("v")
+    mnt.mkdir("/burst")
+    ino = mnt.stat("/burst")["inode"]
+    mp = mnt.client._mp_for_inode(ino)
+    names = [f"d{i}" for i in range(12)]
+    op = cluster.net.begin_op(at=0.0)
+    try:
+        for j, n in enumerate(names):        # fill the early-ack window
+            mnt.mkdir(f"/burst/{n}")
+            if j in (2, 5, 8):               # data writes mid-burst: shed
+                # (the tail of the burst re-fills the window after the
+                # shed backoff advanced the virtual clock)
+                mnt.write_file(f"/shed{j}.bin", b"s" * 4096)
+    finally:
+        cluster.net.end_op()
+    assert mnt.client.stats["qos_sheds"] >= 1, "workload must shed"
+    assert mnt.client.stats["meta_async_acks"] >= len(names)
+    assert mnt.client._meta_unacked.get(mp.pid), \
+        "shed retry must park the window, not drain or drop it"
+    gid = f"mp{mp.pid}"
+    leader = cluster.rc.leader_of(gid)
+    cluster.kill_node(leader)
+    cluster.rc.tick_all(40)
+    assert cluster.rc.leader_of(gid) not in (None, leader)
+    mnt2 = cluster.mount("v")
+    assert sorted(mnt2.readdir("/burst")) == sorted(names)
+    for j in (2, 5, 8):
+        assert mnt2.read_file(f"/shed{j}.bin") == b"s" * 4096
+    report = fsck(cluster, "v")
+    assert report.clean, (report.orphan_inodes, report.dangling_dentries,
+                          report.nlink_drift)
+
+
 def test_client_leader_cache_reduces_retries(cluster):
     """§2.4: after one failover the client caches the new leader."""
     mnt = cluster.mount("v")

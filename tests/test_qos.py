@@ -1,0 +1,255 @@
+"""Multi-tenant QoS (PR 10): WFQ meta-NIC scheduling, data-node admission
+control, and the client's shed/backoff/re-route handling.
+
+Covers the contract pins:
+
+* single-tenant traffic through :class:`WfqResource` is byte-identical to
+  the seed FIFO scheduler (departures AND busy intervals), which is what
+  keeps every committed single-volume baseline unchanged with QoS on;
+* virtual-finish-time pacing across unequal weights;
+* work conservation — capacity paced away from a burst is backfilled once
+  the competing flow idles out;
+* admission control sheds only cross-tenant overload, with a positive
+  ``retry_after_us``, and the client completes the op on another replica;
+* the shed path stays clean under ``CFS_SANITIZE=1`` with forked branches
+  live (raft fan-out inside the same timed ops).
+"""
+
+import pytest
+
+import repro.core.data_node as data_node
+from repro.analysis import sanitizer
+from repro.core import CfsCluster
+from repro.core.simnet import (QOS_EPOCH_US, Network, Resource, WfqResource,
+                               parse_qos_weights)
+
+from benchmarks.qos import bench_qos
+
+
+def _net(qos: bool = True, weights: str = "") -> Network:
+    net = Network(seed=1)
+    net.qos = qos
+    net.qos_weights = parse_qos_weights(weights)
+    return net
+
+
+# ==================================================== WFQ resource: unit
+def test_single_tenant_byte_identical_to_fifo():
+    """One flow only: the WFQ queue must replay the seed earliest-fit
+    machinery verbatim — same departures, same busy intervals, same
+    accounting — including out-of-order arrivals filling gaps."""
+    jobs = [(0.0, 5.0), (12.0, 3.0), (1.0, 4.0), (40.0, 2.0), (6.0, 7.0),
+            (41.0, 0.0), (5.5, 2.5)]
+    plain = Resource("r")
+    wfq = WfqResource("r", _net())
+    ends_plain = [plain.acquire(t, s) for t, s in jobs]
+    ends_wfq = [wfq.acquire(t, s, tenant=("vol", "c0")) for t, s in jobs]
+    assert ends_wfq == ends_plain
+    assert wfq._starts == plain._starts
+    assert wfq._ends == plain._ends
+    assert wfq.busy_us == plain.busy_us
+    assert wfq.queued_us == plain.queued_us
+    assert wfq.jobs == plain.jobs
+
+
+def test_qos_off_delegates_even_with_many_tenants():
+    """CFS_QOS=0: multi-tenant jobs still take the seed FIFO path."""
+    jobs = [(0.0, 5.0, "a"), (1.0, 5.0, "b"), (2.0, 5.0, "c")]
+    plain = Resource("r")
+    wfq = WfqResource("r", _net(qos=False))
+    for t, s, vol in jobs:
+        assert wfq.acquire(t, s, tenant=(vol, "x")) == plain.acquire(t, s)
+    assert wfq._starts == plain._starts and wfq._ends == plain._ends
+    assert not wfq.flow_jobs           # accounting never engaged
+
+
+def test_untagged_jobs_take_fifo_path():
+    plain = Resource("r")
+    wfq = WfqResource("r", _net())
+    assert wfq.acquire(3.0, 4.0) == plain.acquire(3.0, 4.0)
+    assert wfq.acquire(3.5, 4.0, tenant=None) == plain.acquire(3.5, 4.0)
+
+
+def test_light_flow_bypasses_heavy_backlog():
+    """A tenant under its share is the one WFQ serves next: it must not
+    wait behind another tenant's multi-millisecond booked backlog."""
+    wfq = WfqResource("nic", _net())
+    end = 0.0
+    for i in range(300):               # flow a saturates the server solo
+        end = wfq.acquire(i * 2.0, 10.0, tenant=("a", "c"))
+    assert end >= 3000.0               # deep FIFO backlog booked
+    # flow b arrives cold at t=600: under budget -> full-rate lane
+    assert wfq.acquire(600.0, 4.0, tenant=("b", "c")) == 604.0
+    assert wfq.flow_queued_us.get("b", 0.0) == 0.0
+
+
+def test_vft_pacing_across_unequal_weights():
+    """Over-budget flows advance their virtual-finish frontier by
+    ``service * W / w`` — the canonical WFQ finish-tag increment — so a
+    weight-4 tenant pays 4x less pacing debt per unit service than a
+    weight-1 tenant."""
+    wfq = WfqResource("nic", _net(weights="a=4,b=1"))
+    wfq.acquire(0.0, 1.0, tenant=("a", "c"))          # solo seed path
+    wfq.acquire(0.0, 200.0, tenant=("b", "c"))        # over b's 100us budget
+    assert wfq.flow_pace["b"] == pytest.approx(200.0 * 5.0)
+    wfq.acquire(0.0, 500.0, tenant=("a", "c"))        # over a's 400us budget
+    assert wfq.flow_pace["a"] == pytest.approx(500.0 * 5.0 / 4.0)
+    # equal service now costs b 4x the frontier debt it costs a
+    da = wfq.flow_pace["a"] / 500.0
+    db = wfq.flow_pace["b"] / 200.0
+    assert db == pytest.approx(4.0 * da)
+
+
+def test_work_conservation_when_flow_idles():
+    """Pacing gaps are backfilled: once the light flow has been idle a
+    full epoch it is pruned, and the heavy flow re-enters the plain FIFO
+    path — earliest-fit from its arrival, pace frontier ignored."""
+    wfq = WfqResource("nic", _net())
+    wfq.acquire(0.0, 100.0, tenant=("a", "c"))        # solo booking
+    wfq.acquire(10.0, 10.0, tenant=("b", "c"))        # b: light lane
+    for t in (20.0, 30.0, 40.0, 50.0, 60.0):          # a: over budget
+        wfq.acquire(t, 300.0, tenant=("a", "c"))
+    assert wfq.flow_pace["a"] > 2500.0                # deep pacing debt
+    # b idle for a full epoch: pruned; a's next job books earliest-fit
+    # into a pacing gap at t=1000 instead of waiting out its frontier
+    end = wfq.acquire(2.0 * QOS_EPOCH_US, 50.0, tenant=("a", "c"))
+    assert end < wfq.flow_pace["a"]
+    assert end == pytest.approx(2.0 * QOS_EPOCH_US + 50.0)
+
+
+def test_parse_qos_weights():
+    assert parse_qos_weights("") == {}
+    assert parse_qos_weights("volA=4,volB=1") == {"volA": 4.0, "volB": 1.0}
+    # malformed entries are skipped, weights floor at a positive epsilon
+    assert parse_qos_weights("volA=oops,volB=2, ,=3") == {"volB": 2.0,
+                                                          "": 3.0}
+    assert parse_qos_weights("v=-1")["v"] > 0.0
+
+
+# ========================================== tenant tagging and accounting
+def test_sub_ops_inherit_tenant():
+    net = Network(seed=3)
+    op = net.begin_op(at=0.0, tenant=("vol", "c1"))
+    sub = net.begin_op(at=5.0)
+    assert sub.tenant == ("vol", "c1")
+    net.end_op()
+    net.end_op()
+    assert net.begin_op(at=0.0).tenant is None
+    net.end_op()
+
+
+def test_timed_call_records_per_volume_stats():
+    c = CfsCluster(n_meta=3, n_data=4, extent_max_size=1024 * 1024, seed=5)
+    c.create_volume("v", 2, 4)
+    mnt = c.mount("v")
+    op = c.net.begin_op(at=0.0)
+    try:
+        mnt.mkdir("/d")
+        mnt.stat("/d")
+    finally:
+        c.net.end_op()
+    per = mnt.client.qos_volume_stats()
+    assert per["v"]["rpcs"] > 0
+    assert mnt.client.stats["per_volume"] == per
+
+
+# ===================================== admission control + client re-route
+@pytest.fixture()
+def two_vol_cluster():
+    c = CfsCluster(n_meta=4, n_data=8, extent_max_size=1024 * 1024, seed=7)
+    c.create_volume("v", n_meta_partitions=3, n_data_partitions=6)
+    c.create_volume("w", n_meta_partitions=3, n_data_partitions=6)
+    return c
+
+
+def _prime_ledgers(cluster, n_files: int = 8):
+    """Timed writes on volume ``w`` stamp per-volume admission ledgers on
+    (most of) the data nodes."""
+    wm = cluster.mount("w")
+    op = cluster.net.begin_op(at=0.0)
+    try:
+        for i in range(n_files):
+            wm.write_file(f"/w{i}.bin", b"w" * 4096)
+    finally:
+        cluster.net.end_op()
+    return wm
+
+
+def test_single_tenant_never_sheds(monkeypatch):
+    """Admission control only bounds CROSS-tenant overload: with one
+    volume on the cluster, even a microscopic bound never sheds."""
+    monkeypatch.setattr(data_node, "QOS_ADMIT_US", 0.5)
+    c = CfsCluster(n_meta=4, n_data=8, extent_max_size=1024 * 1024, seed=7)
+    c.create_volume("v", 3, 6)
+    mnt = c.mount("v")
+    op = c.net.begin_op(at=0.0)
+    try:
+        for i in range(8):
+            mnt.write_file(f"/f{i}.bin", b"x" * 8192)
+    finally:
+        c.net.end_op()
+    assert mnt.client.stats["qos_sheds"] == 0
+    assert sum(d.sheds for d in c.data_nodes.values()) == 0
+
+
+def test_cross_tenant_shed_backs_off_and_completes(two_vol_cluster,
+                                                   monkeypatch):
+    """With a competing tenant active on the node's ledger and a tiny
+    admission bound, the data node NAKs ``Busy{retry_after_us > 0}``;
+    the client backs off, re-routes, and still completes every write."""
+    monkeypatch.setattr(data_node, "QOS_ADMIT_US", 1.0)
+    c = two_vol_cluster
+    _prime_ledgers(c)
+    vm = c.mount("v")
+    payloads = {f"/v{i}.bin": bytes([65 + i]) * 4096 for i in range(6)}
+    op = c.net.begin_op(at=0.0)
+    try:
+        for path, data in payloads.items():
+            vm.write_file(path, data)
+    finally:
+        c.net.end_op()
+    st = vm.client.stats
+    assert st["qos_sheds"] >= 1
+    assert st["qos_shed_retries"] >= 1
+    assert st["qos_backoff_us"] > 0.0          # retry_after_us was positive
+    assert sum(d.sheds for d in c.data_nodes.values()) >= 1
+    for path, data in payloads.items():        # nothing lost or truncated
+        assert vm.read_file(path) == data
+
+
+def test_shed_with_forked_branches_sanitizer_clean(two_vol_cluster,
+                                                   monkeypatch):
+    """The Busy NAK path must not confuse the happens-before sanitizer:
+    run the cross-tenant shed workload (raft fan-out forks live inside
+    the same timed ops) with sanitize hooks enabled."""
+    monkeypatch.setattr(data_node, "QOS_ADMIT_US", 1.0)
+    c = two_vol_cluster
+    prev = sanitizer.SAN
+    sanitizer.enable()
+    try:
+        _prime_ledgers(c)
+        vm = c.mount("v")
+        op = c.net.begin_op(at=0.0)
+        try:
+            for i in range(4):
+                vm.mkdir(f"/d{i}")             # raft fan-out forks
+                vm.write_file(f"/s{i}.bin", b"s" * 4096)
+        finally:
+            c.net.end_op()
+        assert vm.client.stats["qos_sheds"] >= 1
+        for i in range(4):
+            assert vm.read_file(f"/s{i}.bin") == b"s" * 4096
+    finally:
+        sanitizer.SAN = prev
+
+
+# =============================================== two-volume integration
+def test_victim_tail_bounded_under_aggressor():
+    """The acceptance bar: a 64-proc DirCreation aggressor on a shared
+    cluster may not push the victim volume's stat/open p99 beyond 2x its
+    isolated baseline with QoS on — while QoS off shows the cliff."""
+    iso, qos_on, qos_off = bench_qos(smoke=False)
+    assert iso.system == "isolated" and qos_on.system == "cfs-qos"
+    assert qos_on.p99_us <= 2.0 * iso.p99_us, (qos_on.p99_us, iso.p99_us)
+    assert qos_off.p99_us > 2.0 * iso.p99_us, (qos_off.p99_us, iso.p99_us)
+    assert qos_off.p99_us > qos_on.p99_us
